@@ -1,0 +1,64 @@
+"""Paper Table 1 / Prop. 1: continuous-vs-discrete adjoint gradient
+discrepancy and its O(h^2)-per-step decay, plus reverse-accuracy of every
+discrete policy (gradients vs AD-through-solver at machine precision)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import fmt_row
+from repro.core.adjoint import odeint
+
+jax.config.update("jax_enable_x64", True)
+
+D = 10
+
+
+def _problem():
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    u0 = jax.random.normal(ks[0], (D,))
+    th = {"W": 0.3 * jax.random.normal(ks[1], (D, D)),
+          "b": 0.1 * jax.random.normal(ks[2], (D,))}
+
+    def f(u, theta, t):
+        return jnp.tanh(theta["W"] @ u + theta["b"])
+
+    return f, u0, th
+
+
+def grad_gap(policy: str, n_steps: int, method: str = "euler",
+             horizon: float = 0.8, **kw) -> float:
+    f, u0, th = _problem()
+    dt = horizon / n_steps
+
+    def gof(pol, kw_):
+        def L(u0):
+            return jnp.sum(odeint(f, u0, th, dt=dt, n_steps=n_steps,
+                                  method=method, adjoint=pol, **kw_) ** 2)
+        return jax.grad(L)(u0)
+
+    g = gof(policy, kw)
+    g_ref = gof("naive", {})
+    return float(jnp.max(jnp.abs(g - g_ref)) / jnp.max(jnp.abs(g_ref)))
+
+
+def main() -> None:
+    print("== adjoint_discrepancy (paper Table 1 / Prop. 1) ==")
+    print(fmt_row("method", "N_t", "cont rel-gap", "ratio", "pnode rel-gap",
+                  widths=[10, 6, 14, 8, 14]))
+    for method in ("euler", "midpoint", "rk4"):
+        prev = None
+        for n in (10, 20, 40, 80):
+            gap_c = grad_gap("continuous", n, method)
+            gap_p = grad_gap("pnode", n, method)
+            ratio = "" if prev is None else f"{prev / gap_c:.2f}"
+            print(fmt_row(method, n, f"{gap_c:.3e}", ratio, f"{gap_p:.1e}",
+                          widths=[10, 6, 14, 8, 14]))
+            prev = gap_c
+    print("(cont ratio ~2 per halving of h at fixed horizon = O(h) global,"
+          " O(h^2) per step; pnode pinned at machine eps)")
+
+
+if __name__ == "__main__":
+    main()

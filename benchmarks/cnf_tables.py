@@ -1,0 +1,89 @@
+"""Paper Tables 3-7: CNF density-estimation performance per integration
+scheme x framework policy on the three tabular datasets (POWER 6-d,
+MINIBOONE 43-d, BSDS300 63-d — synthetic stand-ins with the paper's dims,
+batch sizes, and step counts; the datasets aren't available offline).
+
+Columns mirror the paper: NFE-F, NFE-B, time/iteration, memory (XLA
+compiled temp+arg bytes standing in for nvidia-smi GPU GiB)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import compiled_bytes, fmt_row, gib, time_call
+from repro.core.cnf import cnf_log_prob
+from repro.models.ode_nets import cnf_vf, cnf_vf_init
+
+# dataset stand-ins: (dim, batch, hidden) per FFJORD's tuned configs
+DATASETS = {
+    "POWER": (6, 512, (64, 64, 64)),       # paper batch 10000: scaled to CPU
+    "MINIBOONE": (43, 256, (171, 171)),
+    "BSDS300": (63, 128, (128, 128)),
+}
+
+# scheme -> N_t per dataset, matching Tables 3-7 row headers
+SCHEMES = {
+    "euler": {"POWER": 50, "MINIBOONE": 20, "BSDS300": 100},
+    "midpoint": {"POWER": 40, "MINIBOONE": 16, "BSDS300": 80},
+    "bosh3": {"POWER": 30, "MINIBOONE": 12, "BSDS300": 60},
+    "rk4": {"POWER": 20, "MINIBOONE": 8, "BSDS300": 40},
+    "dopri5": {"POWER": 10, "MINIBOONE": 4, "BSDS300": 20},
+}
+
+FRAMEWORKS = [("naive", {}), ("continuous", {}), ("anode", {}), ("aca", {}),
+              ("pnode", {}), ("pnode2", {})]
+
+
+def bench_cell(dataset: str, scheme: str, policy: str, pkw: dict,
+               iters: int = 2) -> dict:
+    dim, batch, hidden = DATASETS[dataset]
+    n_steps = SCHEMES[scheme][dataset]
+    theta = cnf_vf_init(jax.random.PRNGKey(0), dim, hidden=hidden)
+    x = jax.random.normal(jax.random.PRNGKey(1), (batch, dim))
+
+    def nll(theta, x):
+        lp = cnf_log_prob(cnf_vf, x, theta, dt=1.0 / n_steps,
+                          n_steps=n_steps, method=scheme, adjoint=policy,
+                          **pkw)
+        return -lp.mean()
+
+    grad_fn = jax.jit(jax.value_and_grad(nll))
+
+    # analytic NFE accounting — validated against runtime-counted f calls in
+    # tests/test_adjoint.py::test_nfe_accounting (eager counting here would
+    # take minutes per cell on CPU)
+    from repro.core.adjoint import nfe_backward, nfe_forward
+    nfe_f = nfe_forward(scheme, n_steps)
+    nfe_b = nfe_backward(scheme, n_steps, policy, pkw.get("ncheck"))
+
+    t = time_call(grad_fn, theta, x, warmup=1, iters=iters)
+    mem = compiled_bytes(jax.value_and_grad(nll), theta, x)
+    return {"nfe_f": nfe_f, "nfe_b": nfe_b, "time_s": t,
+            "mem_bytes": mem["total"]}
+
+
+def main(quick: bool = True) -> None:
+    schemes = ["euler", "dopri5"] if quick else list(SCHEMES)
+    datasets = ["POWER", "MINIBOONE"] if quick else list(DATASETS)
+    for scheme in schemes:
+        print(f"== cnf_tables ({scheme}; paper Tables 3-7) ==")
+        print(fmt_row("dataset", "framework", "N_t", "NFE-F", "NFE-B",
+                      "t/iter (s)", "mem (GiB)",
+                      widths=[10, 11, 5, 7, 7, 11, 10]))
+        for ds in datasets:
+            for pol, kw in FRAMEWORKS:
+                try:
+                    r = bench_cell(ds, scheme, pol, kw)
+                    print(fmt_row(ds, pol, SCHEMES[scheme][ds], r["nfe_f"],
+                                  r["nfe_b"], f"{r['time_s']:.3f}",
+                                  gib(r["mem_bytes"]),
+                                  widths=[10, 11, 5, 7, 7, 11, 10]))
+                except Exception as e:  # noqa: BLE001
+                    print(fmt_row(ds, pol, SCHEMES[scheme][ds], "-", "-",
+                                  "FAIL", type(e).__name__,
+                                  widths=[10, 11, 5, 7, 7, 11, 10]))
+
+
+if __name__ == "__main__":
+    import sys
+    main(quick="--full" not in sys.argv)

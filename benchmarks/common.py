@@ -1,0 +1,65 @@
+"""Shared benchmark utilities: timing, compiled-memory accounting, CSV."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax import tree_util as jtu
+
+
+def time_call(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall time (s) of ``fn(*args)`` after warmup."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def compiled_bytes(fn: Callable, *args) -> dict:
+    """Compiler-accounted live-buffer bytes of the jitted fn — the CPU/TPU
+    analogue of the paper's nvidia-smi GPU memory column (stronger: it is
+    XLA's own temp+argument accounting, not an allocator high-water mark)."""
+    jitted = jax.jit(fn)
+    compiled = jitted.lower(*args).compile()
+    mem = compiled.memory_analysis()
+    if mem is None:  # backend without memory analysis
+        return {"temp": -1, "argument": -1, "output": -1, "total": -1}
+    d = {
+        "temp": getattr(mem, "temp_size_in_bytes", -1),
+        "argument": getattr(mem, "argument_size_in_bytes", -1),
+        "output": getattr(mem, "output_size_in_bytes", -1),
+    }
+    d["total"] = d["temp"] + d["argument"]
+    return d
+
+
+class NFECounter:
+    """Wrap a vector field to count true f evaluations at trace time."""
+
+    def __init__(self, f):
+        self.f = f
+        self.n = 0
+
+    def __call__(self, u, theta, t):
+        self.n += 1
+        return self.f(u, theta, t)
+
+    def reset(self):
+        self.n = 0
+
+
+def fmt_row(*cells, widths=None) -> str:
+    if widths is None:
+        widths = [18] * len(cells)
+    return "  ".join(str(c)[:w].ljust(w) for c, w in zip(cells, widths))
+
+
+def gib(n: int | float) -> str:
+    return f"{n / 2**30:.3f}"

@@ -1,0 +1,60 @@
+"""Roofline report: reads the dry-run JSONs under experiments/dryrun/ and
+prints the per-(arch x shape x mesh) three-term roofline table used in
+EXPERIMENTS.md §Roofline."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import fmt_row
+
+ROOT = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def load(mesh: str = "pod", tag: str = "") -> list[dict]:
+    out = []
+    d = ROOT / mesh
+    if not d.exists():
+        return out
+    for p in sorted(d.glob("*.json")):
+        rec = json.loads(p.read_text())
+        if rec.get("tag", "") == tag:
+            out.append(rec)
+    return out
+
+
+def main() -> None:
+    for mesh in ("pod", "multipod"):
+        recs = load(mesh)
+        if not recs:
+            print(f"(no dry-run records for mesh={mesh}; run "
+                  f"`python -m repro.launch.dryrun --all --mesh {mesh}`)")
+            continue
+        print(f"== roofline ({mesh}) ==")
+        print(fmt_row("arch", "shape", "compute_s", "memory_s", "coll_s",
+                      "dominant", "useful/HLO", "hbm GiB/dev",
+                      widths=[24, 12, 10, 10, 10, 10, 10, 11]))
+        n_ok = n_skip = 0
+        for r in recs:
+            if r["status"] == "skipped":
+                n_skip += 1
+                print(fmt_row(r["arch"], r["shape"], "-", "-", "-", "SKIP",
+                              "-", "-",
+                              widths=[24, 12, 10, 10, 10, 10, 10, 11]))
+                continue
+            n_ok += 1
+            rr = r["roofline"]
+            mem = r.get("memory") or {}
+            hbm = (mem.get("temp_bytes") or 0) + (mem.get("argument_bytes")
+                                                  or 0)
+            print(fmt_row(
+                r["arch"], r["shape"], f"{rr['compute_s']:.4f}",
+                f"{rr['memory_s']:.4f}", f"{rr['collective_s']:.4f}",
+                rr["dominant"], f"{r['useful_flops_ratio']:.3f}",
+                f"{hbm / 2**30:.2f}",
+                widths=[24, 12, 10, 10, 10, 10, 10, 11]))
+        print(f"{n_ok} ok, {n_skip} skipped")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Benchmark driver: one section per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run            # quick versions
+  PYTHONPATH=src python -m benchmarks.run --full     # full sweeps
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    full = "--full" in sys.argv
+
+    from benchmarks import (adjoint_discrepancy, cnf_tables, fig3_memory,
+                            roofline, stiff_table8, table2_costs)
+
+    sections = [
+        ("adjoint_discrepancy (Table 1 / Prop 1)",
+         adjoint_discrepancy.main),
+        ("table2_costs (Table 2)", table2_costs.main),
+        ("cnf_tables (Tables 3-7)",
+         lambda: cnf_tables.main(quick=not full)),
+        ("stiff_table8 (Table 8 / Fig 5)", stiff_table8.main),
+        ("fig3_memory (Fig 3)", fig3_memory.main),
+        ("roofline (EXPERIMENTS Roofline)", roofline.main),
+    ]
+
+    t00 = time.time()
+    failures = []
+    for name, fn in sections:
+        print(f"\n######## {name} ########")
+        t0 = time.time()
+        try:
+            fn()
+        except Exception as e:  # noqa: BLE001 - report and continue
+            failures.append((name, e))
+            print(f"SECTION FAILED: {type(e).__name__}: {e}")
+        print(f"[{name}: {time.time()-t0:.1f}s]")
+    print(f"\n== benchmarks done in {time.time()-t00:.1f}s; "
+          f"{len(failures)} failed sections ==")
+    for name, e in failures:
+        print(f"  FAILED {name}: {type(e).__name__}: {e}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""Paper Table 2: per-policy forward/reverse computation, recomputation
+overhead, and memory — both the analytic model and *measured* quantities
+(counted NFE + XLA compiled temp bytes)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import NFECounter, compiled_bytes, fmt_row, gib
+from repro.core.adjoint import (checkpoint_floats, nfe_backward, nfe_forward,
+                                odeint)
+
+D = 256        # state dim (wide enough that checkpoint bytes dominate)
+HID = 512
+
+
+def _problem():
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    u0 = jax.random.normal(ks[0], (8, D))
+    th = {"w1": 0.05 * jax.random.normal(ks[1], (D, HID)),
+          "w2": 0.05 * jax.random.normal(ks[2], (HID, D))}
+
+    def f(u, theta, t):
+        return jnp.tanh(u @ theta["w1"]) @ theta["w2"]
+
+    return f, u0, th
+
+
+POLICIES = [("naive", {}), ("continuous", {}), ("anode", {}), ("aca", {}),
+            ("pnode", {}), ("pnode2", {}), ("revolve", {"ncheck": 4}),
+            ("revolve2", {"ncheck": 4})]
+
+
+def main(method: str = "rk4", n_steps: int = 16) -> None:
+    print(f"== table2_costs ({method}, N_t={n_steps}) ==")
+    print(fmt_row("policy", "NFE-F", "NFE-B", "NFE-B(model)", "grad MiB",
+                  "ckpt model (floats)",
+                  widths=[12, 7, 7, 13, 10, 20]))
+    f, u0, th = _problem()
+
+    for pol, kw in POLICIES:
+        counter = NFECounter(f)
+
+        def L(u0, th):
+            uf = odeint(counter, u0, th, dt=0.05, n_steps=n_steps,
+                        method=method, adjoint=pol, **kw)
+            return jnp.sum(uf ** 2)
+
+        counter.reset()
+        with jax.disable_jit():
+            jax.grad(L, argnums=(0, 1))(u0, th)
+        measured_total = counter.n
+        nfe_f = nfe_forward(method, n_steps)
+        nfe_b = measured_total - nfe_f
+
+        mem = compiled_bytes(
+            lambda u0, th: jax.grad(L, argnums=(0, 1))(u0, th), u0, th)
+        model_b = nfe_backward(method, n_steps, pol, kw.get("ncheck"))
+        ck = checkpoint_floats(method, n_steps, pol, state_size=8 * D,
+                               ncheck=kw.get("ncheck"))
+        print(fmt_row(pol, nfe_f, nfe_b, model_b,
+                      f"{mem['temp'] / 2**20:.2f}", ck,
+                      widths=[12, 7, 7, 13, 10, 20]))
+
+
+if __name__ == "__main__":
+    main()

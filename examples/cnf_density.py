@@ -1,0 +1,74 @@
+"""Paper §5.2: FFJORD continuous normalizing flow for density estimation,
+trained with the PNODE adjoint (synthetic two-moons-style 2-d target so the
+example runs on CPU in minutes; the benchmark harness covers the tabular
+POWER/MINIBOONE/BSDS300 shapes).
+
+  PYTHONPATH=src python examples/cnf_density.py [--iters 300] \
+      [--adjoint pnode|pnode2|revolve|aca|continuous|naive]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cnf import cnf_log_prob, cnf_sample
+from repro.models.ode_nets import cnf_vf, cnf_vf_init
+from repro.optim.adamw import AdamW
+
+
+def two_moons(key, n):
+    k1, k2, k3 = jax.random.split(key, 3)
+    theta = jnp.pi * jax.random.uniform(k1, (n,))
+    upper = jax.random.bernoulli(k2, 0.5, (n,))
+    x = jnp.where(upper, jnp.cos(theta), 1 - jnp.cos(theta))
+    y = jnp.where(upper, jnp.sin(theta), 0.5 - jnp.sin(theta))
+    pts = jnp.stack([x, y], -1)
+    return pts + 0.08 * jax.random.normal(k3, pts.shape)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--iters", type=int, default=200)
+    ap.add_argument("--adjoint", default="pnode")
+    ap.add_argument("--ncheck", type=int, default=4)
+    ap.add_argument("--n-steps", type=int, default=12)
+    ap.add_argument("--method", default="bosh3")
+    args = ap.parse_args()
+
+    theta = cnf_vf_init(jax.random.PRNGKey(0), 2, hidden=(64, 64))
+    opt = AdamW(lr=2e-3, weight_decay=1e-5, warmup_steps=20,
+                total_steps=args.iters)
+    kw = {"ncheck": args.ncheck} if args.adjoint.startswith("revolve") else {}
+
+    def nll(theta, x):
+        lp = cnf_log_prob(cnf_vf, x, theta, dt=1.0 / args.n_steps,
+                          n_steps=args.n_steps, method=args.method,
+                          adjoint=args.adjoint, **kw)
+        return -lp.mean()
+
+    g_fn = jax.jit(jax.value_and_grad(nll))
+    state = opt.init(theta)
+    key = jax.random.PRNGKey(42)
+    t0 = time.time()
+    for it in range(args.iters):
+        key, sub = jax.random.split(key)
+        x = two_moons(sub, 256)
+        loss, g = g_fn(theta, x)
+        theta, state, _ = opt.update(g, state, theta)
+        if it % max(1, args.iters // 10) == 0:
+            print(f"iter {it:4d} nll {float(loss):.4f} "
+                  f"({(time.time()-t0)/(it+1)*1e3:.0f} ms/iter)")
+
+    # held-out NLL + sample roundtrip
+    x_test = two_moons(jax.random.PRNGKey(7), 1024)
+    final_nll = float(nll(theta, x_test))
+    print(f"final held-out NLL: {final_nll:.4f} (adjoint={args.adjoint})")
+    z = jax.random.normal(jax.random.PRNGKey(8), (8, 2))
+    samples = cnf_sample(cnf_vf, z, theta, dt=1.0 / args.n_steps,
+                         n_steps=args.n_steps, method=args.method)
+    print("samples:\n", samples)
+
+
+if __name__ == "__main__":
+    main()

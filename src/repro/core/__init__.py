@@ -1,0 +1,18 @@
+"""PNODE core: high-level discrete adjoint ODE solves with checkpointing."""
+from repro.core.adjoint import (POLICIES, checkpoint_floats, nfe_backward,
+                                nfe_forward, odeint)
+from repro.core.adaptive import AdaptiveInfo, odeint_adaptive
+from repro.core.depth_ode import ODEBlock, checkpointed_scan
+from repro.core.implicit import implicit_step, odeint_implicit
+from repro.core.integrators import solve_fixed, solve_fixed_trajectory
+from repro.core.revolve import (optimal_extra_steps,
+                                prop2_optimal_extra_steps, reverse_schedule,
+                                sweep_checkpoint_positions)
+
+__all__ = [
+    "POLICIES", "odeint", "odeint_implicit", "odeint_adaptive", "ODEBlock",
+    "checkpointed_scan", "solve_fixed", "solve_fixed_trajectory",
+    "optimal_extra_steps", "prop2_optimal_extra_steps", "reverse_schedule",
+    "sweep_checkpoint_positions", "nfe_forward", "nfe_backward",
+    "checkpoint_floats", "implicit_step", "AdaptiveInfo",
+]

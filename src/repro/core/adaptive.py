@@ -1,0 +1,175 @@
+"""Adaptive-step Dopri5 with discrete adjoint over *accepted* steps.
+
+The paper (§4) notes that rejected steps have no influence on the cost or
+memory of PNODE's reverse pass because the adjoint involves only accepted
+steps.  We reproduce that here: the forward pass is a bounded
+``lax.while_loop`` with a PI step-size controller; accepted steps write
+(state, stages, h, t) into a preallocated ring buffer of ``max_steps``; the
+reverse pass scans the buffer backward applying the per-stage discrete
+adjoint with each step's own h.
+
+Returns (u_final, info) where info carries NFE counters (accepted/rejected) —
+these feed the Table-8 benchmark.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import tree_util as jtu
+
+from repro.core.integrators import (
+    PyTree,
+    VectorField,
+    rk_adjoint_step,
+    rk_combine,
+    rk_stages,
+    tree_add,
+    tree_stack,
+    tree_zeros_like,
+)
+from repro.core.tableaus import DOPRI5, get_tableau
+
+
+class AdaptiveInfo(NamedTuple):
+    n_accepted: jax.Array
+    n_rejected: jax.Array
+    nfe_forward: jax.Array
+
+
+def _error_norm(u, u_new, err, rtol, atol):
+    def leaf(e, a, b):
+        scale = atol + rtol * jnp.maximum(jnp.abs(a), jnp.abs(b))
+        return jnp.sum((e / scale) ** 2), e.size
+
+    parts = [leaf(e, a, b) for e, a, b in zip(
+        jtu.tree_leaves(err), jtu.tree_leaves(u), jtu.tree_leaves(u_new))]
+    total = sum(p[0] for p in parts)
+    count = sum(p[1] for p in parts)
+    return jnp.sqrt(total / count)
+
+
+def odeint_adaptive(f: VectorField, u0: PyTree, theta: PyTree, *,
+                    t0: float, t1: float, rtol: float = 1e-6,
+                    atol: float = 1e-6, max_steps: int = 512,
+                    h0: float | None = None, method: str = "dopri5"):
+    """Adaptive solve from t0 to t1; differentiable (discrete adjoint over
+    accepted steps).  Returns (u_final, AdaptiveInfo)."""
+    if method != "dopri5":
+        raise ValueError("adaptive integration currently supports dopri5")
+    h_init = float(h0) if h0 is not None else (float(t1) - float(t0)) / 100.0
+    u_final, info = _odeint_adaptive(f, float(t0), float(t1), float(rtol),
+                                     float(atol), int(max_steps),
+                                     float(h_init), u0, theta)
+    return u_final, info
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3, 4, 5, 6))
+def _odeint_adaptive(f, t0, t1, rtol, atol, max_steps, h0, u0, theta):
+    out, _res = _adaptive_fwd_solve(f, t0, t1, rtol, atol, max_steps, h0, u0,
+                                    theta)
+    return out
+
+
+def _adaptive_fwd_solve(f, t0, t1, rtol, atol, max_steps, h0, u0, theta):
+    tab = DOPRI5
+    s = tab.num_stages
+    order = tab.order
+
+    def buf_like(x):
+        return jnp.zeros((max_steps,) + x.shape, x.dtype)
+
+    state_buf = jtu.tree_map(buf_like, u0)
+    stage0 = tree_stack([u0] * s)  # shape template for stages
+    stage_buf = jtu.tree_map(buf_like, jtu.tree_map(jnp.zeros_like, stage0))
+    h_buf = jnp.zeros((max_steps,), jnp.result_type(float))
+    t_buf = jnp.zeros((max_steps,), jnp.result_type(float))
+
+    def cond(carry):
+        u, t, h, n_acc, n_rej, bufs, err_prev = carry
+        return jnp.logical_and(t < t1 - 1e-14, n_acc < max_steps)
+
+    def body(carry):
+        u, t, h, n_acc, n_rej, bufs, err_prev = carry
+        h = jnp.minimum(h, t1 - t)
+        ks = rk_stages(f, tab, u, theta, t, h)
+        u_new = rk_combine(tab, u, ks, h)
+        # embedded error estimate
+        err = None
+        for i in range(s):
+            ci = float(tab.b[i] - tab.b_err[i])
+            if ci == 0.0:
+                continue
+            term = jtu.tree_map(lambda k: h * ci * k, ks[i])
+            err = term if err is None else tree_add(err, term)
+        enorm = _error_norm(u, u_new, err, rtol, atol)
+        accept = enorm <= 1.0
+
+        # PI controller (Hairer-Norsett-Wanner II.4): alpha=0.7/p, beta=0.4/p
+        alpha, beta = 0.7 / order, 0.4 / order
+        factor = 0.9 * (enorm + 1e-10) ** (-alpha) * (err_prev + 1e-10) ** (beta)
+        factor = jnp.clip(factor, 0.2, 5.0)
+        h_next = h * jnp.where(accept, factor, jnp.minimum(factor, 1.0))
+
+        sb, kb, hb, tb = bufs
+        idx = n_acc
+        sb2 = jtu.tree_map(lambda b, x: b.at[idx].set(
+            jnp.where(accept, x, b[idx])), sb, u)
+        kb2 = jtu.tree_map(lambda b, x: b.at[idx].set(
+            jnp.where(accept, x, b[idx])), kb, tree_stack(ks))
+        hb2 = hb.at[idx].set(jnp.where(accept, h, hb[idx]))
+        tb2 = tb.at[idx].set(jnp.where(accept, t, tb[idx]))
+
+        u_out = jtu.tree_map(lambda a, b: jnp.where(accept, b, a), u, u_new)
+        t_out = jnp.where(accept, t + h, t)
+        return (u_out, t_out, h_next,
+                n_acc + accept.astype(jnp.int32),
+                n_rej + (1 - accept.astype(jnp.int32)),
+                (sb2, kb2, hb2, tb2),
+                jnp.where(accept, enorm, err_prev))
+
+    carry0 = (u0, jnp.asarray(t0, jnp.result_type(float)),
+              jnp.asarray(h0, jnp.result_type(float)),
+              jnp.array(0, jnp.int32), jnp.array(0, jnp.int32),
+              (state_buf, stage_buf, h_buf, t_buf),
+              jnp.asarray(1.0, jnp.result_type(float)))
+    u_f, t_f, h_f, n_acc, n_rej, bufs, _ = jax.lax.while_loop(cond, body, carry0)
+    nfe = (n_acc + n_rej) * s
+    info = AdaptiveInfo(n_accepted=n_acc, n_rejected=n_rej, nfe_forward=nfe)
+    return (u_f, info), (bufs, n_acc, theta)
+
+
+def _odeint_adaptive_fwd(f, t0, t1, rtol, atol, max_steps, h0, u0, theta):
+    out, res = _adaptive_fwd_solve(f, t0, t1, rtol, atol, max_steps, h0, u0,
+                                   theta)
+    return out, res
+
+
+def _odeint_adaptive_bwd(f, t0, t1, rtol, atol, max_steps, h0, res, g):
+    tab = DOPRI5
+    bufs, n_acc, theta = res
+    sb, kb, hb, tb = bufs
+    g_u, _g_info = g  # ignore cotangents of the counters
+
+    def body(carry, idx):
+        lam, mu = carry
+        valid = idx < n_acc
+        u_n = jtu.tree_map(lambda b: b[idx], sb)
+        k_n = jtu.tree_map(lambda b: b[idx], kb)
+        h_n = hb[idx]
+        t_n = tb[idx]
+        lam2, th_bar = rk_adjoint_step(f, tab, u_n, k_n, theta, t_n, h_n, lam)
+        lam_out = jtu.tree_map(lambda a, b: jnp.where(valid, b, a), lam, lam2)
+        mu_out = jtu.tree_map(
+            lambda m, d: m + jnp.where(valid, d, jnp.zeros_like(d)), mu, th_bar)
+        return (lam_out, mu_out), None
+
+    (lam, mu), _ = jax.lax.scan(
+        body, (g_u, tree_zeros_like(theta)),
+        jnp.arange(max_steps), reverse=True)
+    return lam, mu
+
+
+_odeint_adaptive.defvjp(_odeint_adaptive_fwd, _odeint_adaptive_bwd)

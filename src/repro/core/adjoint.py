@@ -1,0 +1,455 @@
+"""High-level discrete adjoint ODE solves with checkpointing (the paper's core).
+
+``odeint(f, u0, theta, ...)`` integrates du/dt = f(u, theta, t) for a fixed
+number of steps and differentiates with a selectable *adjoint policy*.  Every
+baseline of the paper's Table 2 is implemented:
+
+  naive       NODE-naive: differentiate straight through the `lax.scan`
+              (deepest graph; XLA stores per-step residuals: O(N_t N_s N_l)).
+  continuous  NODE-cont (vanilla neural ODE): integrate the continuous
+              adjoint ODE backward in time, re-solving the state backward.
+              NOT reverse-accurate (O(h^2) per-step discrepancy, Prop. 1).
+  anode       ANODE: checkpoint only the block input; in the reverse pass,
+              recompute the whole forward and backprop through it.
+  aca         ACA: checkpoint the state at every step; reverse pass
+              re-executes each step under low-level AD (jax.vjp of the step).
+  pnode       the paper's method: checkpoint states AND stage values at every
+              step; reverse pass uses the high-level per-stage adjoint
+              (rk_adjoint_step) — no recomputation, graph depth O(N_l).
+  pnode2      PNODE2 variant: checkpoint solutions only; one step recompute
+              per reverse step.
+  revolve     PNODE with the binomial checkpointing schedule of Prop. 2
+              (`ncheck` slots), trading recomputation for memory.
+
+Gradients are returned w.r.t. ``u0`` and ``theta``.  ``t0``/``dt`` are static.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax import tree_util as jtu
+
+from repro.core import revolve as revolve_mod
+from repro.core.integrators import (
+    PyTree,
+    VectorField,
+    rk_adjoint_step,
+    rk_combine,
+    rk_stages,
+    rk_step,
+    solve_fixed,
+    tree_add,
+    tree_scale,
+    tree_stack,
+    tree_unstack,
+    tree_zeros_like,
+)
+from repro.core.tableaus import get_tableau
+
+POLICIES = ("naive", "continuous", "anode", "aca", "pnode", "pnode2",
+            "revolve", "revolve2")
+
+
+def _t_of(t0: float, dt: float, n) -> Any:
+    return t0 + dt * n
+
+
+# ---------------------------------------------------------------------------
+# public API
+# ---------------------------------------------------------------------------
+
+def odeint(f: VectorField, u0: PyTree, theta: PyTree, *, dt: float,
+           n_steps: int, t0: float = 0.0, method: str = "rk4",
+           adjoint: str = "pnode", ncheck: int | None = None) -> PyTree:
+    """Fixed-step ODE solve, differentiable with the selected adjoint policy."""
+    if adjoint not in POLICIES:
+        raise ValueError(f"unknown adjoint policy {adjoint!r}; one of {POLICIES}")
+    if adjoint == "naive":
+        u_final, _ = solve_fixed(f, method, u0, theta, t0, dt, n_steps)
+        return u_final
+    if adjoint == "revolve":
+        if ncheck is None:
+            raise ValueError("adjoint='revolve' requires ncheck")
+        return _odeint_revolve(f, method, float(t0), float(dt), int(n_steps),
+                               int(ncheck), u0, theta)
+    if adjoint == "revolve2":
+        if ncheck is None:
+            raise ValueError("adjoint='revolve2' requires ncheck")
+        return _odeint_revolve2(f, method, float(t0), float(dt), int(n_steps),
+                                int(ncheck), u0, theta)
+    return _odeint_cv(f, method, float(t0), float(dt), int(n_steps),
+                      adjoint, u0, theta)
+
+
+def nfe_forward(method: str, n_steps: int) -> int:
+    return get_tableau(method).num_stages * n_steps
+
+
+def adjoint_stages(method: str) -> int:
+    """Stages the discrete adjoint actually linearizes: stage i is skipped
+    when b_i == 0 and no later stage depends on it (e.g. dopri5's 7th/FSAL
+    stage), so NFE-B can be below N_s per step."""
+    tab = get_tableau(method)
+    s = tab.num_stages
+    return sum(
+        1 for i in range(s)
+        if float(tab.b[i]) != 0.0
+        or any(float(tab.a[j, i]) != 0.0 for j in range(i + 1, s)))
+
+
+def nfe_backward(method: str, n_steps: int, adjoint: str,
+                 ncheck: int | None = None) -> int:
+    """Analytic NFE-B (f evaluations in the reverse pass), Table-2 accounting.
+
+    A transposed JVP of f costs one f evaluation (linearization); a recomputed
+    step costs N_s evaluations.
+    """
+    s = get_tableau(method).num_stages
+    sa = adjoint_stages(method)
+    if adjoint == "naive":
+        return 0
+    if adjoint == "continuous":
+        # backward solve of the augmented system: one f linearization per stage
+        return s * n_steps
+    if adjoint == "anode":
+        # full forward recompute + backprop through it
+        return 2 * s * n_steps
+    if adjoint == "aca":
+        # re-execute each step (s evals) + backprop its graph (s evals)
+        return 2 * s * n_steps
+    if adjoint == "pnode":
+        return sa * n_steps
+    if adjoint == "pnode2":
+        # recompute stages of each step + per-stage vjps
+        return s * n_steps + sa * n_steps
+    if adjoint == "revolve":
+        extra = revolve_mod.optimal_extra_steps(n_steps, ncheck)
+        return s * extra + sa * n_steps
+    if adjoint == "revolve2":
+        # each non-boundary step re-advanced exactly once
+        n_bound = len(revolve_mod.sweep_checkpoint_positions(n_steps,
+                                                             ncheck)) + 1
+        return s * (n_steps - n_bound) + sa * n_steps
+    raise ValueError(adjoint)
+
+
+def checkpoint_floats(method: str, n_steps: int, adjoint: str, state_size: int,
+                      ncheck: int | None = None) -> int:
+    """Analytic checkpoint storage (in state-vector units x state_size)."""
+    s = get_tableau(method).num_stages
+    if adjoint in ("naive",):
+        return 0
+    if adjoint == "continuous":
+        return 0
+    if adjoint == "anode":
+        return state_size
+    if adjoint == "aca":
+        return n_steps * state_size
+    if adjoint == "pnode":
+        return n_steps * (s + 1) * state_size
+    if adjoint == "pnode2":
+        return n_steps * state_size
+    if adjoint == "revolve":
+        return (ncheck + 1) * (s + 1) * state_size  # +1: segment boundary
+    if adjoint == "revolve2":
+        # boundary states + one in-flight segment of states+stages
+        bounds = [0] + revolve_mod.sweep_checkpoint_positions(n_steps, ncheck)
+        seg = max(b - a for a, b in zip(bounds, bounds[1:] + [n_steps]))
+        return (len(bounds) + seg * (s + 1)) * state_size
+    raise ValueError(adjoint)
+
+
+# ---------------------------------------------------------------------------
+# custom_vjp core (continuous / anode / aca / pnode / pnode2)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3, 4, 5))
+def _odeint_cv(f, method, t0, dt, n_steps, policy, u0, theta):
+    u_final, _ = solve_fixed(f, method, u0, theta, t0, dt, n_steps)
+    return u_final
+
+
+def _odeint_cv_fwd(f, method, t0, dt, n_steps, policy, u0, theta):
+    if policy == "continuous":
+        u_final, _ = solve_fixed(f, method, u0, theta, t0, dt, n_steps)
+        return u_final, (u_final, theta)
+    if policy == "anode":
+        u_final, _ = solve_fixed(f, method, u0, theta, t0, dt, n_steps)
+        return u_final, (u0, theta)
+    if policy == "aca" or policy == "pnode2":
+        u_final, saved = solve_fixed(f, method, u0, theta, t0, dt, n_steps,
+                                     save_states=True)
+        return u_final, (saved["states"], theta)
+    if policy == "pnode":
+        u_final, saved = solve_fixed(f, method, u0, theta, t0, dt, n_steps,
+                                     save_states=True, save_stages=True)
+        return u_final, (saved["states"], saved["stages"], theta)
+    raise ValueError(policy)
+
+
+def _odeint_cv_bwd(f, method, t0, dt, n_steps, policy, res, g):
+    tab = get_tableau(method)
+
+    if policy == "continuous":
+        u_final, theta = res
+        lam0 = g
+        mu0 = tree_zeros_like(theta)
+
+        def aug_f(state, th, t):
+            u, lam, _ = state
+            fval, vjp_fn = jax.vjp(lambda uu, tt: f(uu, tt, t), u, th)
+            u_bar, th_bar = vjp_fn(lam)
+            # integrated backward in time with negative dt below, so signs
+            # follow d(lam)/dt = -f_u^T lam, d(mu)/dt = -f_th^T lam
+            return (fval, tree_scale(-1.0, u_bar), tree_scale(-1.0, th_bar))
+
+        state0 = (u_final, lam0, mu0)
+        tF = t0 + dt * n_steps
+        state_final, _ = solve_fixed(aug_f, method, state0, theta, tF, -dt,
+                                     n_steps)
+        _, lam, mu = state_final
+        return lam, mu
+
+    if policy == "anode":
+        u0, theta = res
+
+        def full(u0_, th_):
+            uf, _ = solve_fixed(f, method, u0_, th_, t0, dt, n_steps)
+            return uf
+
+        _, vjp_fn = jax.vjp(full, u0, theta)
+        return vjp_fn(g)
+
+    if policy == "aca":
+        states, theta = res  # states: pre-step states u_0..u_{N-1}, stacked
+
+        def step_fn(u, th, t):
+            u_next, _ = rk_step(f, tab, u, th, t, dt)
+            return u_next
+
+        def body(carry, inp):
+            lam, mu = carry
+            u_n, n = inp
+            t_n = _t_of(t0, dt, n)
+            _, vjp_fn = jax.vjp(lambda uu, th: step_fn(uu, th, t_n), u_n, theta)
+            lam, th_bar = vjp_fn(lam)
+            return (lam, tree_add(mu, th_bar)), None
+
+        (lam, mu), _ = jax.lax.scan(
+            body, (g, tree_zeros_like(theta)),
+            (states, jnp.arange(n_steps)), reverse=True)
+        return lam, mu
+
+    if policy == "pnode":
+        states, stages, theta = res
+
+        def body(carry, inp):
+            lam, mu = carry
+            u_n, k_n, n = inp
+            t_n = _t_of(t0, dt, n)
+            lam, th_bar = rk_adjoint_step(f, tab, u_n, k_n, theta, t_n, dt, lam)
+            return (lam, tree_add(mu, th_bar)), None
+
+        (lam, mu), _ = jax.lax.scan(
+            body, (g, tree_zeros_like(theta)),
+            (states, stages, jnp.arange(n_steps)), reverse=True)
+        return lam, mu
+
+    if policy == "pnode2":
+        states, theta = res
+
+        def body(carry, inp):
+            lam, mu = carry
+            u_n, n = inp
+            t_n = _t_of(t0, dt, n)
+            ks = rk_stages(f, tab, u_n, theta, t_n, dt)  # recompute stages
+            lam, th_bar = rk_adjoint_step(f, tab, u_n, tree_stack(ks), theta,
+                                          t_n, dt, lam)
+            return (lam, tree_add(mu, th_bar)), None
+
+        (lam, mu), _ = jax.lax.scan(
+            body, (g, tree_zeros_like(theta)),
+            (states, jnp.arange(n_steps)), reverse=True)
+        return lam, mu
+
+    raise ValueError(policy)
+
+
+_odeint_cv.defvjp(_odeint_cv_fwd, _odeint_cv_bwd)
+
+
+# ---------------------------------------------------------------------------
+# revolve policy (binomial checkpointing, trace-time schedule)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3, 4, 5))
+def _odeint_revolve(f, method, t0, dt, n_steps, ncheck, u0, theta):
+    u_final, _ = solve_fixed(f, method, u0, theta, t0, dt, n_steps)
+    return u_final
+
+
+def _advance_segment(f, tab, u, theta, t_start_idx, n, t0, dt):
+    """Run n plain RK steps from u starting at step index t_start_idx."""
+    if n <= 0:
+        return u
+
+    def body(carry, k):
+        t = _t_of(t0, dt, t_start_idx + k)
+        u_next, _ = rk_step(f, tab, carry, theta, t, dt)
+        return u_next, None
+
+    u_out, _ = jax.lax.scan(body, u, jnp.arange(n))
+    return u_out
+
+
+def _odeint_revolve_fwd(f, method, t0, dt, n_steps, ncheck, u0, theta):
+    tab = get_tableau(method)
+    positions = [0] + revolve_mod.sweep_checkpoint_positions(n_steps, ncheck)
+    ckpt_vals = []
+    u = u0
+    bounds = positions + [n_steps]
+    for a, b in zip(bounds[:-1], bounds[1:]):
+        # execute step a explicitly to capture its stages for the checkpoint
+        t_a = _t_of(t0, dt, a)
+        u_next, stages_a = rk_step(f, tab, u, theta, t_a, dt)
+        ckpt_vals.append((u, stages_a))
+        u = _advance_segment(f, tab, u_next, theta, a + 1, b - a - 1, t0, dt)
+    return u, (tuple(ckpt_vals), theta)
+
+
+def _odeint_revolve_bwd(f, method, t0, dt, n_steps, ncheck, res, g):
+    tab = get_tableau(method)
+    ckpt_vals, theta = res
+    positions = [0] + revolve_mod.sweep_checkpoint_positions(n_steps, ncheck)
+    ckpt = {p: v for p, v in zip(positions, ckpt_vals)}
+
+    lam = g
+    mu = tree_zeros_like(theta)
+    for act in revolve_mod.reverse_schedule(n_steps, ncheck):
+        kind = act[0]
+        if kind == "advance":
+            _, start, m = act
+            u_s, st_s = ckpt[start]
+            # stage-combine restart: u_{start+1} with zero f evaluations
+            u = rk_combine(tab, u_s, tree_unstack(st_s, tab.num_stages), dt)
+            u = _advance_segment(f, tab, u, theta, start + 1, m - 1, t0, dt)
+            t_tgt = _t_of(t0, dt, start + m)
+            _, stages_tgt = rk_step(f, tab, u, theta, t_tgt, dt)
+            ckpt[start + m] = (u, stages_tgt)
+        elif kind == "adjoint":
+            _, idx = act
+            u_i, st_i = ckpt.pop(idx)
+            t_i = _t_of(t0, dt, idx)
+            lam, th_bar = rk_adjoint_step(f, tab, u_i, st_i, theta, t_i, dt, lam)
+            mu = tree_add(mu, th_bar)
+            # the schedule is unrolled at trace time; without a barrier XLA
+            # may hoist every step's theta-sized stage gradients and keep
+            # them live simultaneously (O(N_t N_s |theta|) temp instead of
+            # O(|theta|)).  Serialize the chain explicitly.
+            lam, mu = jax.lax.optimization_barrier((lam, mu))
+        elif kind == "free":
+            ckpt.pop(act[1], None)
+        else:  # pragma: no cover
+            raise ValueError(act)
+    return lam, mu
+
+
+_odeint_revolve.defvjp(_odeint_revolve_fwd, _odeint_revolve_bwd)
+
+
+# ---------------------------------------------------------------------------
+# revolve2: two-level binomial checkpointing with SCANNED per-segment adjoint
+#
+# The recursive `revolve` schedule above achieves the exact Prop-2 recompute
+# optimum but unrolls one subgraph per action; XLA:CPU's parallel scheduler
+# then refuses to overlap the per-step theta-gradient buffers, inflating
+# compiled temp memory to O(N_t |theta|) even though true liveness is O(1)
+# (see EXPERIMENTS.md SPerf).  revolve2 trades a small amount of recompute
+# optimality for a *scanned* executor whose compiled liveness is bounded on
+# every backend: the forward sweep stores only the `ncheck` boundary states
+# chosen by the optimal sweep placement; the reverse pass re-advances each
+# segment once (saving its states+stages inside a scan) and then scans the
+# high-level stage adjoint backward over it.  Memory: ncheck states +
+# max_segment*(N_s+1) states + O(|theta|).  Recompute: N_t - ncheck - 1
+# steps (the t<=2 regime of Prop. 2, where it matches the optimum up to one
+# step per segment).  This is the production default for LM-scale training.
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3, 4, 5))
+def _odeint_revolve2(f, method, t0, dt, n_steps, ncheck, u0, theta):
+    u_final, _ = solve_fixed(f, method, u0, theta, t0, dt, n_steps)
+    return u_final
+
+
+def _segment_bounds(n_steps: int, ncheck: int):
+    positions = [0] + revolve_mod.sweep_checkpoint_positions(n_steps, ncheck)
+    return list(zip(positions, positions[1:] + [n_steps]))
+
+
+def _odeint_revolve2_fwd(f, method, t0, dt, n_steps, ncheck, u0, theta):
+    bounds = _segment_bounds(n_steps, ncheck)
+    boundary_states = []
+    u = u0
+    for a, b in bounds:
+        boundary_states.append(u)
+        u = _advance_segment(f, get_tableau(method), u, theta, a, b - a,
+                             t0, dt)
+    return u, (tuple(boundary_states), theta)
+
+
+def _odeint_revolve2_bwd(f, method, t0, dt, n_steps, ncheck, res, g):
+    tab = get_tableau(method)
+    boundary_states, theta = res
+    bounds = _segment_bounds(n_steps, ncheck)
+
+    lam = g
+    mu = tree_zeros_like(theta)
+    for (a, b), u_a in zip(reversed(bounds), reversed(boundary_states)):
+        m = b - a
+        # re-advance the segment, saving states and stages (scan)
+        _, saved = solve_fixed(f, method, u_a, theta, t0 + dt * a, dt, m,
+                               save_states=True, save_stages=True)
+
+        def body(carry, inp):
+            lam_, mu_ = carry
+            u_n, k_n, n = inp
+            t_n = t0 + dt * (a + n)
+            lam_, th_bar = rk_adjoint_step(f, tab, u_n, k_n, theta, t_n, dt,
+                                           lam_)
+            return (lam_, tree_add(mu_, th_bar)), None
+
+        (lam, mu), _ = jax.lax.scan(
+            body, (lam, mu),
+            (saved["states"], saved["stages"], jnp.arange(m)), reverse=True)
+    return lam, mu
+
+
+_odeint_revolve2.defvjp(_odeint_revolve2_fwd, _odeint_revolve2_bwd)
+
+
+# ---------------------------------------------------------------------------
+# trajectory-loss support (the paper's eq. 2 integral term)
+# ---------------------------------------------------------------------------
+
+def odeint_with_quadrature(f: VectorField, q, u0: PyTree, theta: PyTree, *,
+                           dt: float, n_steps: int, t0: float = 0.0,
+                           method: str = "rk4", adjoint: str = "pnode",
+                           ncheck: int | None = None):
+    """Integrate du/dt = f AND the loss quadrature dQ/dt = q(u, theta, t)
+    jointly (eq. 2's integral term: running costs / Tikhonov / kinetic
+    regularizers a la Finlay et al.).  Returns (u_final, Q).
+
+    The augmented system is just another vector field, so every adjoint
+    policy — including revolve checkpointing — applies unchanged, and the
+    gradient of any function of (u_final, Q) is reverse-accurate."""
+    def aug(state, th, t):
+        u, _ = state
+        return (f(u, th, t), q(u, th, t))
+
+    q0 = jnp.zeros((), jnp.result_type(float))
+    u_final, Q = odeint(aug, (u0, q0), theta, dt=dt, n_steps=n_steps, t0=t0,
+                        method=method, adjoint=adjoint, ncheck=ncheck)
+    return u_final, Q

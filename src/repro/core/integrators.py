@@ -1,0 +1,230 @@
+"""Explicit Runge-Kutta stepping on pytrees + fixed-step forward solves.
+
+The vector field signature everywhere in this framework is
+
+    f(u, theta, t) -> du/dt
+
+with ``u`` and ``theta`` arbitrary pytrees and ``t`` a scalar.
+
+``rk_step`` computes one step and returns the stage derivatives so that the
+high-level discrete adjoint (``core/adjoint.py``) can reconstruct stage
+inputs without re-evaluating ``f`` — this is the paper's "checkpoint the
+states *and stage values*" design (PNODE).  ``rk_adjoint_step`` implements
+the discrete adjoint recursion (eq. 7 of the paper, in the standard RK
+adjoint form of Hager/Sandu): one transposed JVP of ``f`` per stage, so the
+backpropagation graph depth is O(N_l), independent of N_t.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import tree_util as jtu
+
+from repro.core.tableaus import ButcherTableau, get_tableau
+
+PyTree = Any
+VectorField = Callable[[PyTree, PyTree, jax.Array], PyTree]
+
+
+# ---------------------------------------------------------------------------
+# pytree arithmetic helpers
+# ---------------------------------------------------------------------------
+
+def tree_add(a: PyTree, b: PyTree) -> PyTree:
+    return jtu.tree_map(jnp.add, a, b)
+
+
+def tree_sub(a: PyTree, b: PyTree) -> PyTree:
+    return jtu.tree_map(jnp.subtract, a, b)
+
+
+def tree_scale(s, a: PyTree) -> PyTree:
+    return jtu.tree_map(lambda x: s * x, a)
+
+
+def tree_axpy(s, x: PyTree, y: PyTree) -> PyTree:
+    """y + s * x elementwise over the pytree."""
+    return jtu.tree_map(lambda xi, yi: yi + s * xi, x, y)
+
+
+def tree_zeros_like(a: PyTree) -> PyTree:
+    return jtu.tree_map(jnp.zeros_like, a)
+
+
+def tree_lincomb(coeffs, trees) -> PyTree:
+    """sum_i coeffs[i] * trees[i]; skips zero coefficients (trace-time)."""
+    acc = None
+    for c, tr in zip(coeffs, trees):
+        if isinstance(c, float) and c == 0.0:
+            continue
+        term = tree_scale(c, tr)
+        acc = term if acc is None else tree_add(acc, term)
+    if acc is None:
+        acc = tree_zeros_like(trees[0])
+    return acc
+
+
+def tree_stack(trees) -> PyTree:
+    return jtu.tree_map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def tree_unstack(tree, n) -> list:
+    return [jtu.tree_map(lambda x: x[i], tree) for i in range(n)]
+
+
+def tree_dot(a: PyTree, b: PyTree) -> jax.Array:
+    leaves = jtu.tree_map(lambda x, y: jnp.sum(x * y), a, b)
+    return jtu.tree_reduce(jnp.add, leaves)
+
+
+def tree_norm(a: PyTree) -> jax.Array:
+    return jnp.sqrt(tree_dot(a, a))
+
+
+def tree_cast(a: PyTree, dtype) -> PyTree:
+    return jtu.tree_map(lambda x: x.astype(dtype), a)
+
+
+# ---------------------------------------------------------------------------
+# explicit RK stepping
+# ---------------------------------------------------------------------------
+
+def rk_stages(f: VectorField, tab: ButcherTableau, u: PyTree, theta: PyTree,
+              t, h) -> list:
+    """Compute the stage derivatives k_1..k_s (list of pytrees)."""
+    ks: list = []
+    for i in range(tab.num_stages):
+        xi = u
+        for j in range(i):
+            aij = float(tab.a[i, j])
+            if aij != 0.0:
+                xi = tree_axpy(h * aij, ks[j], xi)
+        ks.append(f(xi, theta, t + float(tab.c[i]) * h))
+    return ks
+
+
+def rk_combine(tab: ButcherTableau, u: PyTree, ks, h) -> PyTree:
+    """u + h * sum_i b_i k_i."""
+    out = u
+    for i in range(tab.num_stages):
+        bi = float(tab.b[i])
+        if bi != 0.0:
+            out = tree_axpy(h * bi, ks[i], out)
+    return out
+
+
+def rk_step(f: VectorField, tab: ButcherTableau, u: PyTree, theta: PyTree,
+            t, h) -> Tuple[PyTree, PyTree]:
+    """One explicit RK step.  Returns (u_next, stages) with stages stacked
+    along a new leading axis of size N_s (so it scans cleanly)."""
+    ks = rk_stages(f, tab, u, theta, t, h)
+    u_next = rk_combine(tab, u, ks, h)
+    return u_next, tree_stack(ks)
+
+
+def rk_stage_inputs(tab: ButcherTableau, u: PyTree, stages: PyTree, h) -> list:
+    """Reconstruct the stage inputs x_i = u + h*sum_j a_ij k_j from stored
+    stage derivatives — no f evaluations (the PNODE trick)."""
+    ks = tree_unstack(stages, tab.num_stages)
+    xs = []
+    for i in range(tab.num_stages):
+        xi = u
+        for j in range(i):
+            aij = float(tab.a[i, j])
+            if aij != 0.0:
+                xi = tree_axpy(h * aij, ks[j], xi)
+        xs.append(xi)
+    return xs
+
+
+def rk_adjoint_step(f: VectorField, tab: ButcherTableau, u: PyTree,
+                    stages: PyTree, theta: PyTree, t, h,
+                    lam: PyTree) -> Tuple[PyTree, PyTree]:
+    """Discrete adjoint of one explicit RK step (the paper's eq. 7).
+
+    Given the step's initial state ``u``, its stored stage derivatives, and
+    the incoming adjoint ``lam`` (= lambda_{n+1}), returns
+
+        lam_prev  = (d u_{n+1} / d u_n)^T lam
+        theta_bar = (d u_{n+1} / d theta)^T lam     (increment for mu)
+
+    Implementation: reverse stage recursion
+        v_i     = b_i * lam + sum_{j>i} a_ji * w_j
+        (w_i, g_i) = vjp(f, x_i)(h * v_i)        # one transposed JVP per stage
+        lam_prev = lam + sum_i w_i
+        theta_bar = sum_i g_i
+    """
+    s = tab.num_stages
+    xs = rk_stage_inputs(tab, u, stages, h)
+    ws: list = [None] * s
+    lam_prev = lam
+    theta_bar = None
+    for i in reversed(range(s)):
+        vi = tree_scale(float(tab.b[i]), lam)
+        for j in range(i + 1, s):
+            aji = float(tab.a[j, i])
+            if aji != 0.0 and ws[j] is not None:
+                vi = tree_axpy(aji, ws[j], vi)
+        if float(tab.b[i]) == 0.0 and all(
+            float(tab.a[j, i]) == 0.0 for j in range(i + 1, s)
+        ):
+            ws[i] = None
+            continue
+        ti = t + float(tab.c[i]) * h
+        _, vjp_fn = jax.vjp(lambda uu, th: f(uu, th, ti), xs[i], theta)
+        wi, gi = vjp_fn(tree_scale(h, vi))
+        ws[i] = wi
+        lam_prev = tree_add(lam_prev, wi)
+        theta_bar = gi if theta_bar is None else tree_add(theta_bar, gi)
+    if theta_bar is None:
+        theta_bar = tree_zeros_like(theta)
+    return lam_prev, theta_bar
+
+
+# ---------------------------------------------------------------------------
+# fixed-step forward solves
+# ---------------------------------------------------------------------------
+
+def solve_fixed(f: VectorField, method: str, u0: PyTree, theta: PyTree,
+                t0: float, h: float, n_steps: int,
+                save_states: bool = False,
+                save_stages: bool = False):
+    """Integrate n_steps of size h with a fixed-step explicit RK method.
+
+    Returns (u_final, saved) where ``saved`` is a dict possibly containing
+    'states' (the N_t *pre-step* states u_0..u_{N_t-1}) and 'stages'
+    (N_t stacked stage pytrees).
+    """
+    tab = get_tableau(method)
+
+    def body(carry, n):
+        u = carry
+        t = t0 + n.astype(jnp.result_type(float)) * h
+        u_next, stages = rk_step(f, tab, u, theta, t, h)
+        out = {}
+        if save_states:
+            out["states"] = u
+        if save_stages:
+            out["stages"] = stages
+        return u_next, out
+
+    u_final, saved = jax.lax.scan(body, u0, jnp.arange(n_steps))
+    return u_final, saved
+
+
+def solve_fixed_trajectory(f: VectorField, method: str, u0: PyTree,
+                           theta: PyTree, t0: float, h: float, n_steps: int):
+    """Like solve_fixed but returns the full trajectory u_1..u_{N_t}
+    (stacked along a new leading axis), for plotting / loss-over-trajectory."""
+    tab = get_tableau(method)
+
+    def body(carry, n):
+        u = carry
+        t = t0 + n.astype(jnp.result_type(float)) * h
+        u_next, _ = rk_step(f, tab, u, theta, t, h)
+        return u_next, u_next
+
+    u_final, traj = jax.lax.scan(body, u0, jnp.arange(n_steps))
+    return u_final, traj

@@ -1,0 +1,5 @@
+from repro.ft.watchdog import (Heartbeat, StragglerDetector, TrainSupervisor,
+                               elastic_remesh_plan)
+
+__all__ = ["Heartbeat", "StragglerDetector", "TrainSupervisor",
+           "elastic_remesh_plan"]

@@ -1,0 +1,39 @@
+"""jit'd public wrappers for the Pallas kernels (model-facing layouts)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention_bhsd
+from repro.kernels.rwkv6_scan import rwkv6_chunked_bhsd
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = 512, block_k: int = 512):
+    """Model layout: q (B,S,H,Dh), k/v (B,S,Hkv,Dh) -> (B,S,H,Dh)."""
+    qt = jnp.moveaxis(q, 1, 2)
+    kt = jnp.moveaxis(k, 1, 2)
+    vt = jnp.moveaxis(v, 1, 2)
+    o = flash_attention_bhsd(qt, kt, vt, causal=causal, window=window,
+                             block_q=block_q, block_k=block_k)
+    return jnp.moveaxis(o, 1, 2)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def rwkv6_chunked(r, k, v, logw, u, *, chunk: int = 64):
+    """Model layout: r/k/v/logw (B,S,H,Dh), u (H,Dh).
+    Returns (out (B,S,H,Dh), final_state (B,H,dk,dv))."""
+    s = r.shape[1]
+    pad = (-s) % chunk
+    def mov(t):
+        tt = jnp.moveaxis(t, 1, 2)
+        if pad:
+            tt = jnp.pad(tt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        return tt
+    out, sfin = rwkv6_chunked_bhsd(mov(r), mov(k), mov(v), mov(logw), u,
+                                   chunk=chunk)
+    return jnp.moveaxis(out, 1, 2)[:, :s], sfin

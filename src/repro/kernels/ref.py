@@ -1,0 +1,49 @@
+"""Pure-jnp oracles for the Pallas kernels (used by per-kernel allclose
+tests, sweeping shapes and dtypes)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal=True, window=0):
+    """q: (B,H,Sq,Dh); k,v: (B,Hkv,Sk,Dh).  fp32 reference softmax attention."""
+    b, h, sq, dh = q.shape
+    hkv, sk = k.shape[1], k.shape[2]
+    rep = h // hkv
+    k = jnp.repeat(k, rep, axis=1)
+    v = jnp.repeat(v, rep, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / jnp.sqrt(dh)
+    qp = jnp.arange(sq)[:, None]
+    kp = jnp.arange(sk)[None, :]
+    ok = jnp.ones((sq, sk), bool)
+    if causal:
+        ok = kp <= qp
+    if window > 0:
+        ok = jnp.logical_and(ok, kp > qp - window)
+    s = jnp.where(ok[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def rwkv6_ref(r, k, v, logw, u):
+    """Sequential RWKV6 recurrence oracle.
+    r/k/v/logw: (B,H,S,dh); u: (H,dh).  Returns (out, final state)."""
+    b, h, s, dh = r.shape
+
+    def step(S, inp):
+        rt, kt, vt, lw = inp          # (B,H,dh)
+        ot = jnp.einsum("bhk,bhkv->bhv", rt, S) \
+            + jnp.einsum("bhk,bhk,bhv->bhv", rt, u[None] * kt, vt)
+        S_new = jnp.exp(lw)[..., None] * S + jnp.einsum(
+            "bhk,bhv->bhkv", kt, vt)
+        return S_new, ot
+
+    S0 = jnp.zeros((b, h, dh, dh), jnp.float32)
+    seq = tuple(jnp.moveaxis(t.astype(jnp.float32), 2, 0)
+                for t in (r, k, v, logw))
+    S, outs = jax.lax.scan(step, S0, seq)
+    return jnp.moveaxis(outs, 0, 2).astype(r.dtype), S

@@ -1,0 +1,410 @@
+"""Trip-count-aware HLO cost accounting for the roofline analysis.
+
+``compiled.cost_analysis()`` counts every ``while`` body ONCE, but a JAX
+``lax.scan`` over 30 transformer layers executes its body 30 times — so the
+built-in numbers under-report FLOPs/bytes/collective-bytes of scanned models
+by up to the trip count (verified: a scanned 10x matmul reports exactly 1
+matmul of FLOPs).  XLA:CPU attaches ``backend_config={"known_trip_count":
+{"n": "30"}}`` to while ops, so an exact re-count is possible from the
+optimized HLO text.
+
+This module parses the post-optimization HLO and computes, with loop
+multipliers applied:
+
+  * flops             — 2*M*N*K for every dot (incl. dots inside fusions),
+                        2*out*window for convolutions
+  * bytes             — XLA-style per-op "bytes accessed" (operands +
+                        results) at fusion granularity (fusion internals are
+                        VMEM-resident and excluded, matching how
+                        HloCostAnalysis treats fused ops)
+  * collective_bytes  — result bytes of all-gather / all-reduce /
+                        reduce-scatter / all-to-all / collective-permute
+
+Used by launch/dryrun.py; validated against cost_analysis() on loop-free
+graphs (equal dot flops) and against trip-count scaling on scanned graphs
+in tests/test_hlo_cost.py.
+"""
+from __future__ import annotations
+
+import json
+import math
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+    "token": 0, "opaque": 0,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?(%?[\w.\-]+)\s*\((.*)\)\s*->")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*(\([^)]*\)|[\w\[\],{}\d]+?)\s+"
+    r"([\w\-]+)\(")
+_OPERAND_RE = re.compile(r"%[\w.\-]+")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS_RE = re.compile(r"calls=(%[\w.\-]+)")
+_COND_RE = re.compile(r"condition=(%[\w.\-]+)")
+_BODY_RE = re.compile(r"body=(%[\w.\-]+)")
+_TO_APPLY_RE = re.compile(r"to_apply=(%[\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_LHS_C_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_LHS_B_RE = re.compile(r"lhs_batch_dims=\{([\d,]*)\}")
+_WINDOW_SIZE_RE = re.compile(r"window=\{[^}]*size=([\dx]+)")
+
+
+def shape_numel_bytes(type_str: str) -> Tuple[int, int]:
+    """(elements, bytes) summed over every array in a (possibly tuple) type."""
+    n_el = n_by = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        n_el += n
+        n_by += n * _DTYPE_BYTES[dt]
+    # scalar like "f32[]" -> the regex catches it with empty dims (n=1)
+    return n_el, n_by
+
+
+def _shape_dims(type_str: str) -> List[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclass
+class Op:
+    name: str
+    kind: str
+    result_type: str
+    line: str
+    operands: List[str] = field(default_factory=list)
+
+
+@dataclass
+class Computation:
+    name: str
+    params: Dict[str, str] = field(default_factory=dict)
+    ops: List[Op] = field(default_factory=list)
+    symbols: Dict[str, str] = field(default_factory=dict)  # name -> type
+
+
+def parse_hlo(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry: Optional[str] = None
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        if not raw:
+            continue
+        if not raw.startswith(" ") and "(" in raw and "->" in raw \
+                and raw.rstrip().endswith("{"):
+            m = _COMP_HDR.match(raw)
+            if not m:
+                continue
+            name = m.group(2)
+            if not name.startswith("%"):
+                name = "%" + name
+            cur = Computation(name)
+            comps[name] = cur
+            if m.group(1):
+                entry = name
+            # params: "a: f32[2,3], b: (s32[], f32[4])" — split carefully
+            psrc = m.group(3)
+            depth = 0
+            part = ""
+            parts = []
+            for ch in psrc:
+                if ch == "," and depth == 0:
+                    parts.append(part)
+                    part = ""
+                    continue
+                if ch in "([{":
+                    depth += 1
+                elif ch in ")]}":
+                    depth -= 1
+                part += ch
+            if part.strip():
+                parts.append(part)
+            for p in parts:
+                if ":" in p:
+                    pname, ptype = p.split(":", 1)
+                    pname = pname.strip()
+                    if not pname.startswith("%"):
+                        pname = "%" + pname
+                    cur.params[pname] = ptype.strip()
+                    cur.symbols[pname] = ptype.strip()
+            continue
+        if raw.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _OP_RE.match(raw)
+        if not m:
+            continue
+        name, rtype, kind = m.groups()
+        # operands: inside the first (...) after the op kind
+        paren = raw.index(kind + "(") + len(kind)
+        depth = 0
+        i = paren
+        end = len(raw)
+        for i in range(paren, len(raw)):
+            if raw[i] == "(":
+                depth += 1
+            elif raw[i] == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        operand_src = raw[paren + 1:end]
+        operands = _OPERAND_RE.findall(operand_src)
+        op = Op(name=name, kind=kind, result_type=rtype, line=raw,
+                operands=operands)
+        cur.ops.append(op)
+        cur.symbols[name] = rtype
+    return comps, entry
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: Dict[str, float] = field(
+        default_factory=lambda: {c: 0.0 for c in COLLECTIVES})
+
+    def add(self, other: "Cost", mult: float = 1.0) -> None:
+        self.flops += mult * other.flops
+        self.bytes += mult * other.bytes
+        for c in COLLECTIVES:
+            self.collective_bytes[c] += mult * other.collective_bytes[c]
+
+    @property
+    def collective_total(self) -> float:
+        return sum(self.collective_bytes.values())
+
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    _, out_bytes = shape_numel_bytes(op.result_type)
+    out_el, _ = shape_numel_bytes(op.result_type)
+    lhs_type = comp.symbols.get(op.operands[0], "") if op.operands else ""
+    lhs_dims = _shape_dims(lhs_type)
+    m = _LHS_C_RE.search(op.line)
+    k = 1
+    if m and lhs_dims:
+        for d in m.group(1).split(","):
+            if d:
+                k *= lhs_dims[int(d)]
+    return 2.0 * out_el * k
+
+
+def _conv_flops(op: Op, comp: Computation) -> float:
+    out_el, _ = shape_numel_bytes(op.result_type)
+    m = _WINDOW_SIZE_RE.search(op.line)
+    window = 1
+    if m:
+        for d in m.group(1).split("x"):
+            window *= int(d)
+    rhs_type = comp.symbols.get(op.operands[1], "") if len(op.operands) > 1 \
+        else ""
+    rhs_dims = _shape_dims(rhs_type)
+    in_feat = rhs_dims[-2] if len(rhs_dims) >= 2 else 1
+    return 2.0 * out_el * window * in_feat
+
+
+def _fusion_flops(comp: Computation, comps) -> float:
+    """dots/convs inside a fusion computation (CPU fuses some dots)."""
+    total = 0.0
+    for op in comp.ops:
+        if op.kind in ("dot", "dot-general"):
+            total += _dot_flops(op, comp)
+        elif op.kind == "convolution":
+            total += _conv_flops(op, comp)
+        elif op.kind == "fusion":
+            m = _CALLS_RE.search(op.line)
+            if m and m.group(1) in comps:
+                total += _fusion_flops(comps[m.group(1)], comps)
+    return total
+
+
+# ops whose *operand* traffic is proportional to their OUTPUT, not to the
+# (possibly huge) operand they address into — matching HloCostAnalysis's
+# special cases.  Charging the full operand would bill a scan's whole
+# stacked parameter table once per iteration.
+_SLICING = {"dynamic-slice", "gather", "slice"}
+_UPDATING = {"dynamic-update-slice", "scatter"}
+
+
+def _op_bytes(op: Op, comp: Computation) -> float:
+    _, out_b = shape_numel_bytes(op.result_type)
+    if op.kind in _SLICING:
+        return 2.0 * out_b  # read the addressed window + write the result
+    if op.kind in _UPDATING:
+        # traffic ~ the update operand (base is updated in place)
+        upd = op.operands[1] if len(op.operands) > 1 else None
+        upd_b = shape_numel_bytes(comp.symbols.get(upd, ""))[1] if upd else 0
+        return 2.0 * upd_b
+    if op.kind in ("broadcast", "iota"):
+        return float(out_b)
+    total = float(out_b)
+    for o in op.operands:
+        t = comp.symbols.get(o)
+        if t:
+            total += shape_numel_bytes(t)[1]
+    return total
+
+
+def _fusion_bytes(op: Op, comp: Computation,
+                  comps: Dict[str, "Computation"]) -> float:
+    """Fusion operand/result traffic with slice-aware parameter billing:
+    a fusion parameter consumed only by slicing ops inside the fusion is
+    charged at the slices' output size, not the full array."""
+    _, out_b = shape_numel_bytes(op.result_type)
+    total = float(out_b)
+    called = None
+    m = _CALLS_RE.search(op.line)
+    if m:
+        called = comps.get(m.group(1))
+    if called is None:
+        for o in op.operands:
+            t = comp.symbols.get(o)
+            if t:
+                total += shape_numel_bytes(t)[1]
+        return total
+    # in-place dynamic-update-slice fusion: the full base buffer is aliased
+    # (scan residual stacking) — traffic is the updated window, not the
+    # buffer.  Charge 2x update bytes; skip operands aliasing the result.
+    dus = [o for o in called.ops if o.kind == "dynamic-update-slice"]
+    if dus:
+        total = 0.0
+        for d in dus:
+            upd = d.operands[1] if len(d.operands) > 1 else None
+            total += 2.0 * shape_numel_bytes(
+                called.symbols.get(upd, ""))[1] if upd else 0.0
+        for o in op.operands:
+            t = comp.symbols.get(o)
+            if t and _SHAPE_RE.search(t) and t.split("{")[0] \
+                    != op.result_type.split("{")[0]:
+                total += min(shape_numel_bytes(t)[1],
+                             shape_numel_bytes(op.result_type)[1])
+        return total
+    params = list(called.params)
+    for i, o in enumerate(op.operands):
+        t = comp.symbols.get(o)
+        if not t:
+            continue
+        full = shape_numel_bytes(t)[1]
+        pname = params[i] if i < len(params) else None
+        if pname is not None:
+            sliced = _sliced_usage_bytes(pname, called)
+            if sliced is not None:
+                total += min(full, sliced)
+                continue
+        total += full
+    return total
+
+
+def _sliced_usage_bytes(pname: str, comp: "Computation"):
+    """If every use of ``pname`` inside ``comp`` is a slicing op, return the
+    summed slice-output bytes; otherwise None (charge the full operand)."""
+    used = False
+    total = 0.0
+    for o in comp.ops:
+        if pname in o.operands:
+            used = True
+            if o.kind in _SLICING and o.operands and o.operands[0] == pname:
+                total += shape_numel_bytes(o.result_type)[1]
+            else:
+                return None
+    return total if used else 0.0
+
+
+_SKIP_BYTES = {"parameter", "constant", "get-tuple-element", "tuple",
+               "bitcast", "after-all"}
+
+
+def computation_cost(comp_name: str, comps: Dict[str, Computation],
+                     memo: Dict[str, Cost]) -> Cost:
+    if comp_name in memo:
+        return memo[comp_name]
+    memo[comp_name] = Cost()  # break cycles defensively
+    comp = comps.get(comp_name)
+    if comp is None:
+        return memo[comp_name]
+    cost = Cost()
+    for op in comp.ops:
+        if op.kind == "while":
+            trip = 1
+            m = _TRIP_RE.search(op.line)
+            if m:
+                trip = int(m.group(1))
+            mb = _BODY_RE.search(op.line)
+            mc = _COND_RE.search(op.line)
+            if mb:
+                cost.add(computation_cost(mb.group(1), comps, memo), trip)
+            if mc:
+                cost.add(computation_cost(mc.group(1), comps, memo),
+                         trip + 1)
+            continue
+        if op.kind == "conditional":
+            mbr = _BRANCHES_RE.search(op.line)
+            if mbr:
+                branch_costs = [
+                    computation_cost(b.strip(), comps, memo)
+                    for b in mbr.group(1).split(",") if b.strip()]
+                if branch_costs:
+                    # one branch executes; take the max (upper bound)
+                    best = max(branch_costs, key=lambda c: c.flops + c.bytes)
+                    cost.add(best)
+            continue
+        if op.kind == "fusion":
+            m = _CALLS_RE.search(op.line)
+            if m:
+                cost.flops += _fusion_flops(comps.get(m.group(1),
+                                                      Computation("")), comps)
+            cost.bytes += _fusion_bytes(op, comp, comps)
+            continue
+        if op.kind == "call":
+            m = _TO_APPLY_RE.search(op.line)
+            if m:
+                cost.add(computation_cost(m.group(1), comps, memo))
+            continue
+        if op.kind in ("dot", "dot-general"):
+            cost.flops += _dot_flops(op, comp)
+            cost.bytes += _op_bytes(op, comp)
+            continue
+        if op.kind == "convolution":
+            cost.flops += _conv_flops(op, comp)
+            cost.bytes += _op_bytes(op, comp)
+            continue
+        base = op.kind.replace("-start", "").replace("-done", "")
+        if base in COLLECTIVES:
+            if op.kind.endswith("-done"):
+                continue  # counted at -start
+            _, out_b = shape_numel_bytes(op.result_type)
+            cost.collective_bytes[base] += out_b
+            cost.bytes += _op_bytes(op, comp)
+            continue
+        if op.kind in _SKIP_BYTES:
+            continue
+        cost.bytes += _op_bytes(op, comp)
+    memo[comp_name] = cost
+    return cost
+
+
+def analyze(hlo_text: str) -> Cost:
+    """Full-module cost with loop trip counts applied."""
+    comps, entry = parse_hlo(hlo_text)
+    if entry is None:
+        raise ValueError("no ENTRY computation found in HLO text")
+    memo: Dict[str, Cost] = {}
+    return computation_cost(entry, comps, memo)

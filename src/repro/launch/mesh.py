@@ -1,0 +1,25 @@
+"""Production mesh construction (v5e pod: 16x16 = 256 chips; multi-pod adds
+a leading 'pod' axis).  A function — importing this module never touches jax
+device state."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_axis: int = 1):
+    """Small mesh over whatever devices exist (CPU tests / examples)."""
+    n = len(jax.devices())
+    data = max(1, n // model_axis)
+    return jax.make_mesh((data, model_axis), ("data", "model"))
+
+
+# TPU v5e hardware constants (per chip) for the roofline analysis
+PEAK_FLOPS_BF16 = 197e12     # FLOP/s
+HBM_BW = 819e9               # B/s
+ICI_BW_PER_LINK = 50e9       # B/s per link

@@ -1,0 +1,71 @@
+"""Step functions (train / prefill / decode) shared by the real launcher and
+the dry-run.  Pure functions of (cfg, cell); jit/sharding applied by callers.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax import tree_util as jtu
+
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.models import lm
+from repro.optim.adamw import AdamW
+
+
+def make_train_step(cfg: ModelConfig, opt: AdamW, accum: int = 1):
+    """Returns train_step(params, opt_state, batch, step) -> (params,
+    opt_state, metrics).  accum > 1 scans over microbatches (gradient
+    accumulation): live activation memory scales with B/accum."""
+
+    def loss_of(params, batch):
+        return lm.loss_fn(cfg, params, batch)
+
+    grad_fn = jax.value_and_grad(loss_of, has_aux=True)
+
+    def train_step(params, opt_state, batch, step):
+        if accum == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            def micro(b_):
+                return jtu.tree_map(
+                    lambda x: x.reshape((accum, x.shape[0] // accum)
+                                        + x.shape[1:]), b_)
+
+            micro_batches = micro(batch)
+
+            def body(carry, mb):
+                gsum, lsum = carry
+                (l, _), g = grad_fn(params, mb)
+                return (jtu.tree_map(jnp.add, gsum, g), lsum + l), None
+
+            g0 = jtu.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+            (grads, loss_sum), _ = jax.lax.scan(body, (g0, 0.0),
+                                                micro_batches)
+            grads = jtu.tree_map(lambda g: g / accum, grads)
+            loss = loss_sum / accum
+            metrics = {}
+        params, opt_state, opt_metrics = opt.update(grads, opt_state, params)
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, max_seq: int):
+    def prefill_step(params, batch):
+        state, last_logits = lm.prefill(cfg, params, batch, max_seq)
+        return state, last_logits
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def decode_step(params, state, token, pos):
+        logits, state = lm.decode_step(cfg, params, state, token, pos)
+        return logits, state
+
+    return decode_step

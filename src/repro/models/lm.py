@@ -1,0 +1,172 @@
+"""Causal LM (+ enc-dec, VLM/audio stubs): init / forward / loss / prefill /
+decode for every assigned architecture family.
+
+Batch dict conventions (see launch/dryrun.py input_specs):
+  train:    {"tokens": (B, S) int32, "targets": (B, S) int32}
+            VLM adds  {"patches": (B, P, D)}  (tokens are (B, S-P))
+            enc-dec:  {"frames": (B, S_enc, D), "tokens"/"targets": (B, S)}
+  prefill:  same minus targets
+  decode:   {"token": (B, 1) int32, "pos": scalar int32} + decode state
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.nn import transformer as tf
+from repro.nn.layers import embedding, embedding_init
+
+Params = Dict[str, Any]
+
+
+MAX_ABS_POS = 32768  # learned positions for rope-free decoders (whisper)
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    ks = jax.random.split(key, 5)
+    pdt = jnp.dtype(cfg.param_dtype)
+    p: Params = {
+        "embed": embedding_init(ks[0], cfg.vocab_size, cfg.d_model, pdt),
+        "blocks": tf.init_stack(ks[1], cfg, cross=cfg.family == "encdec"),
+        "final_norm": tf.rmsnorm_init(cfg.d_model) if cfg.norm == "rmsnorm"
+        else tf.layernorm_init(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        p["head"] = embedding_init(ks[2], cfg.vocab_size, cfg.d_model, pdt)
+    if cfg.family == "encdec":
+        p["enc_blocks"] = tf.init_stack(ks[3], _enc_cfg(cfg), cross=False)
+        p["enc_norm"] = (tf.rmsnorm_init(cfg.d_model)
+                         if cfg.norm == "rmsnorm"
+                         else tf.layernorm_init(cfg.d_model))
+        if cfg.rope_theta == 0:
+            p["pos_embed"] = embedding_init(ks[4], MAX_ABS_POS, cfg.d_model,
+                                            pdt)
+    return p
+
+
+def _enc_cfg(cfg: ModelConfig) -> ModelConfig:
+    import dataclasses
+    return dataclasses.replace(cfg, n_layers=cfg.n_enc_layers,
+                               layer_kinds=("a",) * cfg.n_enc_layers,
+                               windows=(0,) * cfg.n_enc_layers,
+                               n_experts=0, top_k=0, family="dense")
+
+
+def _norm(cfg, p, x):
+    from repro.nn.layers import layernorm, rmsnorm
+    return layernorm(p, x) if cfg.norm == "layernorm" else rmsnorm(p, x)
+
+
+def _logits(cfg: ModelConfig, params: Params, x: jax.Array) -> jax.Array:
+    from repro.dist.sharding import constrain_batch
+    table = params["embed"]["table"] if cfg.tie_embeddings \
+        else params["head"]["table"]
+    out = jnp.einsum("bsd,vd->bsv", x, table.astype(x.dtype))
+    # batch stays on data axes; vocab dim sharded over 'model'
+    return constrain_batch(out, extra={2: "model"})
+
+
+def _encode(cfg: ModelConfig, params: Params, frames: jax.Array) -> jax.Array:
+    ecfg = _enc_cfg(cfg)
+    x = frames.astype(jnp.dtype(cfg.compute_dtype))
+    x, _ = tf.apply_stack(ecfg, params["enc_blocks"], x, causal=False)
+    return _norm(cfg, params["enc_norm"], x)
+
+
+def _embed_tokens(cfg: ModelConfig, params: Params, tokens, pos0=0):
+    from repro.dist.sharding import constrain_batch
+    cdt = jnp.dtype(cfg.compute_dtype)
+    x = constrain_batch(embedding(params["embed"], tokens).astype(cdt))
+    if "pos_embed" in params:
+        pos = pos0 + jnp.arange(tokens.shape[1])
+        x = x + embedding(params["pos_embed"], pos)[None].astype(cdt)
+    return x
+
+
+def forward(cfg: ModelConfig, params: Params, batch: Dict[str, Any]):
+    """Full-sequence forward.  Returns (logits, aux_loss)."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    x = _embed_tokens(cfg, params, batch["tokens"])
+    if cfg.frontend == "vision_stub" and "patches" in batch:
+        x = jnp.concatenate([batch["patches"].astype(cdt), x], axis=1)
+    enc_out = None
+    if cfg.family == "encdec":
+        enc_out = _encode(cfg, params, batch["frames"])
+    x, aux = tf.apply_stack(cfg, params["blocks"], x, enc_out=enc_out,
+                            causal=True)
+    x = _norm(cfg, params["final_norm"], x)
+    if cfg.frontend == "vision_stub" and "patches" in batch:
+        x = x[:, batch["patches"].shape[1]:]  # loss only over text positions
+    return _logits(cfg, params, x), aux
+
+
+def loss_fn(cfg: ModelConfig, params: Params, batch: Dict[str, Any]):
+    """Next-token cross-entropy (+ MoE aux).  Returns (loss, metrics).
+
+    The logsumexp is computed from the compute-dtype logits with fp32
+    accumulation inside the reduction (max-subtract form) instead of first
+    materializing an fp32 copy of the (B, S, V) logits — at gemma3's 262k
+    vocab that copy is 4+ GiB/device and several HBM passes."""
+    logits, aux = forward(cfg, params, batch)
+    targets = batch["targets"]
+    logits = logits[:, :-1]
+    tgt = targets[:, 1:]
+    m = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+    logz = m[..., 0].astype(jnp.float32) + jnp.log(
+        jnp.sum(jnp.exp((logits - m).astype(jnp.float32)), axis=-1))
+    gold = jnp.take_along_axis(logits, tgt[..., None],
+                               axis=-1)[..., 0].astype(jnp.float32)
+    ce = (logz - gold).mean()
+    loss = ce + 0.01 * aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_seq: int):
+    state = tf.init_stack_state(cfg, batch, max_seq,
+                                cross=cfg.family == "encdec")
+    if cfg.family == "encdec":
+        state["enc_out"] = jnp.zeros((batch, cfg.enc_seq, cfg.d_model),
+                                     jnp.dtype(cfg.compute_dtype))
+    return state
+
+
+def prefill(cfg: ModelConfig, params: Params, batch: Dict[str, Any],
+            max_seq: int):
+    """Run the prompt through the model, threading decode state (KV caches /
+    recurrent states) through every layer.  Returns (state, last_logits)."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    x = _embed_tokens(cfg, params, batch["tokens"])
+    if cfg.frontend == "vision_stub" and "patches" in batch:
+        x = jnp.concatenate([batch["patches"].astype(cdt), x], axis=1)
+    enc_out = None
+    if cfg.family == "encdec":
+        enc_out = _encode(cfg, params, batch["frames"])
+    x, state = tf.prefill_stack(cfg, params["blocks"], x, max_seq,
+                                enc_out=enc_out)
+    if enc_out is not None:
+        # decode needs cross-attention context: carry it in the state
+        state["enc_out"] = enc_out
+    x = _norm(cfg, params["final_norm"], x)
+    return state, _logits(cfg, params, x[:, -1:])[:, 0]
+
+
+def decode_step(cfg: ModelConfig, params: Params, state, token: jax.Array,
+                pos, enc_out=None):
+    """One decode step.  token: (B, 1) int32, pos: scalar int32.
+    Returns (logits (B, V), new_state)."""
+    if enc_out is None:
+        enc_out = state.get("enc_out")  # stashed by prefill for enc-dec
+    x = _embed_tokens(cfg, params, token, pos0=pos)
+    inner = {"scan": state["scan"], "rem": state["rem"]}
+    x, inner = tf.decode_stack(cfg, params["blocks"], inner, x, pos,
+                               enc_out=enc_out)
+    new_state = dict(state, **inner)
+    x = _norm(cfg, params["final_norm"], x)
+    return _logits(cfg, params, x)[:, 0], new_state

@@ -1,0 +1,116 @@
+"""Minimal functional NN substrate (flax/optax are not available offline).
+
+Convention: every module is a pair of functions
+    init_<mod>(key, ...) -> params (dict pytree)
+    <mod>(params, x, ...) -> y
+Parameters carry a parallel "spec tree" (see dist/sharding.py) mapping each
+leaf to logical axis names for FSDP/TP sharding.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32, scale=None):
+    s = scale if scale is not None else 1.0 / jnp.sqrt(d_in)
+    return {"w": (jax.random.normal(key, (d_in, d_out)) * s).astype(dtype)}
+
+
+def dense(params: Params, x: jax.Array) -> jax.Array:
+    return x @ params["w"].astype(x.dtype)
+
+
+def rmsnorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(params: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def embedding_init(key, vocab: int, d: int, dtype=jnp.float32):
+    return {"table": (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)}
+
+
+def embedding(params: Params, ids: jax.Array) -> jax.Array:
+    return jnp.take(params["table"], ids, axis=0)
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu,
+            "tanh": jnp.tanh}[name]
+
+
+# ---------------------------------------------------------------------------
+# gated MLP (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+def glu_mlp_init(key, d: int, d_ff: int, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in, s_out = 1.0 / jnp.sqrt(d), 1.0 / jnp.sqrt(d_ff)
+    return {
+        "w_gate": (jax.random.normal(k1, (d, d_ff)) * s_in).astype(dtype),
+        "w_up": (jax.random.normal(k2, (d, d_ff)) * s_in).astype(dtype),
+        "w_down": (jax.random.normal(k3, (d_ff, d)) * s_out).astype(dtype),
+    }
+
+
+def glu_mlp(params: Params, x: jax.Array, act: str = "silu") -> jax.Array:
+    g = act_fn(act)(x @ params["w_gate"].astype(x.dtype))
+    u = x @ params["w_up"].astype(x.dtype)
+    return (g * u) @ params["w_down"].astype(x.dtype)
+
+
+def mlp_init(key, d: int, d_ff: int, dtype=jnp.float32):
+    k1, k2 = jax.random.split(key)
+    return {
+        "w_in": (jax.random.normal(k1, (d, d_ff)) / jnp.sqrt(d)).astype(dtype),
+        "w_out": (jax.random.normal(k2, (d_ff, d)) / jnp.sqrt(d_ff)).astype(dtype),
+    }
+
+
+def mlp(params: Params, x: jax.Array, act: str = "gelu") -> jax.Array:
+    return act_fn(act)(x @ params["w_in"].astype(x.dtype)) @ params["w_out"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float = 1e4) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array,
+               theta: float = 1e4) -> jax.Array:
+    """x: (..., S, H, Dh); positions: (..., S) int. Rotates pairs (even, odd)."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                        # (Dh/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, Dh/2)
+    cos = jnp.cos(ang)[..., None, :]                     # (..., S, 1, Dh/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1 = x[..., 0::2].astype(jnp.float32)
+    x2 = x[..., 1::2].astype(jnp.float32)
+    out = jnp.stack([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.reshape(x.shape).astype(x.dtype)

@@ -1,0 +1,116 @@
+"""Top-k token-choice MoE with GShard-style grouped einsum dispatch.
+
+Tokens are split into contiguous *groups* (aligned with the data-parallel
+sharding), routed to their top-k experts with a per-group capacity buffer
+(``capacity_factor * k * group_size / n_experts`` slots), and dispatched /
+combined with einsums against a (G, S, E, C) mask — the formulation GSPMD
+can partition: the contraction over the group-local token dim never crosses
+shards, so dispatch lowers to expert all-to-alls instead of global
+(T*k, D) all-reduces (the scatter-based formulation measured 73% of all
+collective bytes on the dbrx prefill_32k dry-run before this rewrite).
+
+The (E, C, D) expert buffers put E on the 'model' axis (expert parallelism)
+when E divides it, with groups on 'data'.  Overflowing tokens are dropped
+per group (standard GShard behavior); the router uses softmax-then-top-k
+with normalized weights (mixtral/dbrx convention).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.layers import act_fn
+
+
+def init_moe(key, d_model: int, d_ff: int, n_experts: int,
+             dtype=jnp.float32):
+    kr, kg, ku, kd = jax.random.split(key, 4)
+    s_in, s_out = 1.0 / jnp.sqrt(d_model), 1.0 / jnp.sqrt(d_ff)
+    return {
+        "w_router": (jax.random.normal(kr, (d_model, n_experts)) * s_in).astype(jnp.float32),
+        "w_gate": (jax.random.normal(kg, (n_experts, d_model, d_ff)) * s_in).astype(dtype),
+        "w_up": (jax.random.normal(ku, (n_experts, d_model, d_ff)) * s_in).astype(dtype),
+        "w_down": (jax.random.normal(kd, (n_experts, d_ff, d_model)) * s_out).astype(dtype),
+    }
+
+
+def _group_size(t: int, requested: int) -> int:
+    g = min(requested, t)
+    while t % g:
+        g -= 1
+    return g
+
+
+def moe_block(params, x: jax.Array, *, n_experts: int, top_k: int,
+              act: str = "silu", capacity_factor: float = 1.25,
+              group_size: int = 1024):
+    """x: (B, S, D) -> (B, S, D), plus aux load-balancing loss."""
+    from repro.dist.sharding import constrain_dims
+
+    b, s, d = x.shape
+    t = b * s
+    e = n_experts
+    xf = x.reshape(t, d)
+
+    # --- routing
+    logits = xf.astype(jnp.float32) @ params["w_router"]       # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)          # (T, K)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(axis=-1, keepdims=True), 1e-9)
+
+    # load-balancing aux loss (Switch): E * sum_e f_e * p_e
+    me = probs.mean(axis=0)                                     # (E,)
+    ce = jnp.zeros((e,), jnp.float32).at[gate_idx.reshape(-1)].add(
+        1.0) / (t * top_k)
+    aux_loss = e * jnp.sum(me * ce)
+
+    # --- per-group capacity assignment (k-major-in-token order)
+    g_sz = _group_size(t, group_size)
+    g = t // g_sz
+    cap = int(max(top_k, capacity_factor * top_k * g_sz / e))
+
+    cdt = x.dtype
+    idx_g = gate_idx.reshape(g, g_sz * top_k)                  # (G, S*K)
+    w_g = gate_vals.reshape(g, g_sz * top_k)
+    # integer cumsum + narrow mask dtype: the (G, SK, E, C) masks are the
+    # largest transients of the block (10+ GiB/device in f32 at 64k
+    # tokens/device); int32 position math + compute-dtype masks keep them
+    # within the HBM budget
+    oh_i = jax.nn.one_hot(idx_g, e, dtype=jnp.int32)           # (G, SK, E)
+    pos = jnp.cumsum(oh_i, axis=1) - oh_i
+    pos_of = jnp.sum(pos * oh_i, axis=-1)                      # (G, SK)
+    keep = pos_of < cap
+
+    # dispatch mask (G, SK, E, C); fold the K slots back into tokens
+    cap_oh = jax.nn.one_hot(pos_of, cap, dtype=cdt)            # (G, SK, C)
+    oh = jnp.where(keep[..., None], oh_i, 0).astype(cdt)
+    dm = oh[..., None] * cap_oh[:, :, None, :]
+    dm = dm.reshape(g, g_sz, top_k, e, cap)
+    combine = jnp.sum(dm * w_g.reshape(g, g_sz, top_k, 1, 1).astype(cdt),
+                      axis=2)
+    dispatch = jnp.sum(dm, axis=2)                             # (G, S, E, C)
+    xg = xf.reshape(g, g_sz, d)
+    # (G,S,E,C) x (G,S,D) -> (G,E,C,D): contraction is group-local; GSPMD
+    # turns the G:data / E:model mismatch into the EP all-to-all.  When E
+    # doesn't divide the model axis (mixtral 8e on 16) the experts run
+    # TP-within-expert instead: pin the d_ff dim of the (G,E,C,F)
+    # intermediates to 'model' — otherwise the w_down contraction all-
+    # gathers the full F=14336 activations (measured ~50% of mixtral
+    # train_4k collective bytes).
+    pin_ecd = {0: "data", 1: "model"}
+    pin_ecf = dict(pin_ecd)
+    pin_ecf[3] = "model"  # constrain_dims drops non-divisible pins itself
+    buf = jnp.einsum("gsec,gsd->gecd", dispatch, xg)
+    buf = constrain_dims(buf, pin_ecd)
+
+    gg = act_fn(act)(jnp.einsum("gecd,edf->gecf", buf,
+                                params["w_gate"].astype(cdt)))
+    uu = jnp.einsum("gecd,edf->gecf", buf, params["w_up"].astype(cdt))
+    gg = constrain_dims(gg, pin_ecf)
+    uu = constrain_dims(uu, pin_ecf)
+    y = jnp.einsum("gecf,efd->gecd", gg * uu, params["w_down"].astype(cdt))
+    y = constrain_dims(y, pin_ecd)
+
+    out = jnp.einsum("gsec,gecd->gsd", combine, y)
+    return out.reshape(b, s, d), aux_loss

@@ -1,0 +1,268 @@
+"""Attention-free sequence mixers: RWKV6 (Finch) time-mix and RG-LRU
+(recurrentgemma), in scan, chunked, and associative-scan forms.
+
+RWKV6 recurrence (per head, dk key channels, dv value channels):
+
+    S_t = diag(w_t) S_{t-1} + k_t (x) v_t          (data-dependent decay w_t)
+    o_t = r_t @ S_{t-1} + (r_t . (u . k_t)) v_t     (u: per-channel bonus)
+
+Training uses the *chunked* form (intra-chunk product-form attention with a
+per-channel midpoint renormalization + inter-chunk state propagation) so the
+MXU sees dense matmuls instead of a length-S scan; the Pallas kernel
+(kernels/rwkv6_scan.py) implements the same algorithm with VMEM tiling, and
+the sequential scan here is the oracle.
+
+RG-LRU:  h_t = a_t . h_{t-1} + sqrt(1 - a_t^2) . (i_t . x_t), with
+a_t = exp(-c * softplus(lam) * sigmoid(W_a x_t)) — a diagonal linear
+recurrence, evaluated with `jax.lax.associative_scan` (log-depth on TPU).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.layers import act_fn
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 time-mix
+# ---------------------------------------------------------------------------
+
+def init_rwkv6(key, d_model: int, n_heads: int, dtype=jnp.float32):
+    dh = d_model // n_heads
+    ks = jax.random.split(key, 8)
+    s = 1.0 / jnp.sqrt(d_model)
+
+    def proj(k):
+        return (jax.random.normal(k, (d_model, d_model)) * s).astype(dtype)
+
+    return {
+        "w_r": proj(ks[0]), "w_k": proj(ks[1]), "w_v": proj(ks[2]),
+        "w_g": proj(ks[3]), "w_o": proj(ks[4]),
+        # data-dependent decay: w_t = exp(-exp(w_base + x @ w_lora))
+        "w_base": (jnp.zeros((d_model,)) - 0.5).astype(jnp.float32),
+        "w_lora": (jax.random.normal(ks[5], (d_model, d_model)) * s * 0.1).astype(dtype),
+        "u_bonus": (jax.random.normal(ks[6], (n_heads, dh)) * 0.1).astype(jnp.float32),
+        "mix": (0.5 * jnp.ones((5, d_model))).astype(jnp.float32),  # r,k,v,g,w shifts
+        "ln_scale": jnp.ones((n_heads, dh), jnp.float32),
+    }
+
+
+def _token_shift(x):
+    return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+
+
+def rwkv6_projections(params, x: jax.Array, n_heads: int):
+    """Shared projection code: returns r, k, v, g (B,S,H,dh) and logw (B,S,H,dh)."""
+    b, s, d = x.shape
+    dh = d // n_heads
+    xs = _token_shift(x)
+    mix = params["mix"].astype(x.dtype)
+    xr = x + (xs - x) * mix[0]
+    xk = x + (xs - x) * mix[1]
+    xv = x + (xs - x) * mix[2]
+    xg = x + (xs - x) * mix[3]
+    xw = x + (xs - x) * mix[4]
+    r = (xr @ params["w_r"].astype(x.dtype)).reshape(b, s, n_heads, dh)
+    k = (xk @ params["w_k"].astype(x.dtype)).reshape(b, s, n_heads, dh)
+    v = (xv @ params["w_v"].astype(x.dtype)).reshape(b, s, n_heads, dh)
+    g = xg @ params["w_g"].astype(x.dtype)
+    # data-dependent decay (Finch): log w_t in (-inf, 0)
+    dd = (xw @ params["w_lora"].astype(x.dtype)).astype(jnp.float32)
+    logw = -jnp.exp(params["w_base"] + dd)            # (B,S,D) fp32, < 0
+    logw = logw.reshape(b, s, n_heads, dh)
+    return r, k, v, g, logw
+
+
+def rwkv6_mix_scan(params, x: jax.Array, n_heads: int,
+                   state: jax.Array | None = None):
+    """Sequential oracle.  x: (B,S,D).  state: (B,H,dk,dv) or None.
+    Returns (y, new_state)."""
+    b, s, d = x.shape
+    dh = d // n_heads
+    r, k, v, g, logw = rwkv6_projections(params, x, n_heads)
+    u = params["u_bonus"]
+    if state is None:
+        state = jnp.zeros((b, n_heads, dh, dh), jnp.float32)
+
+    def step(S, inp):
+        rt, kt, vt, lw = inp     # (B,H,dh) each
+        w = jnp.exp(lw)
+        ot = jnp.einsum("bhk,bhkv->bhv", rt, S) \
+            + jnp.einsum("bhk,bhk,bhv->bhv", rt, u[None] * kt, vt)
+        S_new = w[..., None] * S + jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        return S_new, ot
+
+    seq = (jnp.moveaxis(r.astype(jnp.float32), 1, 0),
+           jnp.moveaxis(k.astype(jnp.float32), 1, 0),
+           jnp.moveaxis(v.astype(jnp.float32), 1, 0),
+           jnp.moveaxis(logw, 1, 0))
+    state, outs = jax.lax.scan(step, state, seq)
+    y = jnp.moveaxis(outs, 0, 1)                       # (B,S,H,dh)
+    y = _rwkv_out(params, y, g, x.dtype, b, s, d)
+    return y, state
+
+
+def _rwkv_out(params, y, g, dtype, b, s, d):
+    # per-head groupnorm, silu gate, output proj
+    mu = y.mean(axis=-1, keepdims=True)
+    var = y.var(axis=-1, keepdims=True)
+    y = (y - mu) * jax.lax.rsqrt(var + 1e-5) * params["ln_scale"][None, None]
+    y = y.reshape(b, s, d).astype(dtype) * jax.nn.silu(g)
+    return y @ params["w_o"].astype(dtype)
+
+
+def rwkv6_mix_chunked(params, x: jax.Array, n_heads: int,
+                      state: jax.Array | None = None, chunk: int = 64):
+    """Chunked-parallel form (matches the scan oracle; see module docstring)."""
+    b, s, d = x.shape
+    dh = d // n_heads
+    r, k, v, g, logw = rwkv6_projections(params, x, n_heads)
+    u = params["u_bonus"]
+    if state is None:
+        state = jnp.zeros((b, n_heads, dh, dh), jnp.float32)
+
+    c = min(chunk, s)
+    if s % c != 0:
+        pad = c - s % c
+        r, k, v = (jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                   for t in (r, k, v))
+        logw = jnp.pad(logw, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = r.shape[1] // c
+
+    def resh(t):
+        return jnp.moveaxis(
+            t.reshape(b, nc, c, n_heads, dh).astype(jnp.float32), 1, 0)
+
+    rc, kc, vc, lwc = resh(r), resh(k), resh(v), resh(logw)
+
+    def chunk_step(S, inp):
+        rt, kt, vt, lw = inp                     # (B, C, H, dh)
+        cum = jnp.cumsum(lw, axis=1)             # inclusive cumulative log-decay
+        cum_prev = cum - lw                      # exclusive
+        total = cum[:, -1:]                      # (B,1,H,dh)
+        mid = cum[:, c // 2][:, None]            # midpoint renormalizer
+        q_in = rt * jnp.exp(cum_prev)            # decay from chunk start (<=1)
+        q_mid = rt * jnp.exp(cum_prev - mid)
+        k_mid = kt * jnp.exp(mid - cum)
+        k_out = kt * jnp.exp(total - cum)        # decay to chunk end (<=1)
+        # inter-chunk: state contribution
+        o_inter = jnp.einsum("bchk,bhkv->bchv", q_in, S)
+        # intra-chunk: strictly-lower-triangular attention + u-bonus diagonal
+        att = jnp.einsum("bqhk,bshk->bhqs", q_mid, k_mid)
+        mask = jnp.tril(jnp.ones((c, c), bool), k=-1)
+        att = jnp.where(mask[None, None], att, 0.0)
+        o_intra = jnp.einsum("bhqs,bshv->bqhv", att, vt)
+        o_diag = jnp.einsum("bchk,bchk,bchv->bchv", rt, u[None, None] * kt, vt)
+        # state update
+        S_new = jnp.exp(total[:, 0])[..., None] * S + \
+            jnp.einsum("bchk,bchv->bhkv", k_out, vt)
+        return S_new, o_inter + o_intra + o_diag
+
+    state, outs = jax.lax.scan(chunk_step, state, (rc, kc, vc, lwc))
+    y = jnp.moveaxis(outs, 0, 1).reshape(b, nc * c, n_heads, dh)[:, :s]
+    y = _rwkv_out(params, y, g, x.dtype, b, s, d)
+    return y, state
+
+
+def rwkv6_mix_decode(params, h_prev: jax.Array, h_cur: jax.Array,
+                     state: jax.Array, n_heads: int):
+    """Single-token decode.  h_prev/h_cur: (B,1,D) *normed* inputs of the
+    previous and current token (prev feeds the token-shift mixing only);
+    state: (B,H,dk,dv).  Returns (y (B,1,D), new_state)."""
+    b, _, d = h_cur.shape
+    dh = d // n_heads
+    hh = jnp.concatenate([h_prev.astype(h_cur.dtype), h_cur], axis=1)
+    r, k, v, g, logw = rwkv6_projections(params, hh, n_heads)
+    # only the current position (index 1); its token-shift saw h_prev
+    rt = r[:, 1].astype(jnp.float32)
+    kt = k[:, 1].astype(jnp.float32)
+    vt = v[:, 1].astype(jnp.float32)
+    lw = logw[:, 1]
+    g = g[:, 1:]
+    u = params["u_bonus"]
+    ot = jnp.einsum("bhk,bhkv->bhv", rt, state) \
+        + jnp.einsum("bhk,bhk,bhv->bhv", rt, u[None] * kt, vt)
+    S_new = jnp.exp(lw)[..., None] * state \
+        + jnp.einsum("bhk,bhv->bhkv", kt, vt)
+    y = _rwkv_out(params, ot[:, None], g, h_cur.dtype, b, 1, d)
+    return y, S_new
+
+
+def init_rwkv_channel_mix(key, d_model: int, d_ff: int, dtype=jnp.float32):
+    k1, k2 = jax.random.split(key)
+    s = 1.0 / jnp.sqrt(d_model)
+    return {
+        "w_in": (jax.random.normal(k1, (d_model, d_ff)) * s).astype(dtype),
+        "w_out": (jax.random.normal(k2, (d_ff, d_model))
+                  / jnp.sqrt(d_ff)).astype(dtype),
+        "mix": (0.5 * jnp.ones((d_model,))).astype(jnp.float32),
+    }
+
+
+def rwkv_channel_mix(params, x: jax.Array):
+    xs = _token_shift(x)
+    xk = x + (xs - x) * params["mix"].astype(x.dtype)
+    h = jnp.square(jax.nn.relu(xk @ params["w_in"].astype(x.dtype)))
+    return h @ params["w_out"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (recurrentgemma)
+# ---------------------------------------------------------------------------
+
+def init_rglru_block(key, d_model: int, d_rnn: int, conv_width: int = 4,
+                     dtype=jnp.float32):
+    ks = jax.random.split(key, 6)
+    s = 1.0 / jnp.sqrt(d_model)
+    return {
+        "w_in_gate": (jax.random.normal(ks[0], (d_model, d_rnn)) * s).astype(dtype),
+        "w_in_rnn": (jax.random.normal(ks[1], (d_model, d_rnn)) * s).astype(dtype),
+        "w_out": (jax.random.normal(ks[2], (d_rnn, d_model))
+                  / jnp.sqrt(d_rnn)).astype(dtype),
+        "conv_w": (jax.random.normal(ks[3], (conv_width, d_rnn)) * 0.1).astype(dtype),
+        "w_a": (jax.random.normal(ks[4], (d_rnn, d_rnn)) * (1.0 / jnp.sqrt(d_rnn)) * 0.1).astype(dtype),
+        "w_i": (jax.random.normal(ks[5], (d_rnn, d_rnn)) * (1.0 / jnp.sqrt(d_rnn)) * 0.1).astype(dtype),
+        "lam": jnp.full((d_rnn,), 0.6, jnp.float32),  # softplus param of decay
+    }
+
+
+def _causal_conv1d(x, w):
+    """x: (B,S,D); w: (W,D) depthwise causal conv."""
+    width = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1]] * w[i][None, None] for i in range(width))
+    return out
+
+
+def rglru(params, z: jax.Array, h0: jax.Array | None = None, c: float = 8.0):
+    """Diagonal gated linear recurrence via associative scan.
+    z: (B,S,Dr).  Returns (y, h_last)."""
+    b, s, dr = z.shape
+    a_gate = jax.nn.sigmoid(z @ params["w_a"].astype(z.dtype)).astype(jnp.float32)
+    i_gate = jax.nn.sigmoid(z @ params["w_i"].astype(z.dtype)).astype(jnp.float32)
+    log_a = -c * jax.nn.softplus(params["lam"]) * a_gate    # (B,S,Dr) < 0
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * i_gate \
+        * z.astype(jnp.float32)
+    if h0 is not None:
+        # fold the carry into the first element
+        gated = gated.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    return h.astype(z.dtype), h[:, -1]
+
+
+def rglru_block(params, x: jax.Array, h0: jax.Array | None = None):
+    """recurrentgemma recurrent block: gated branch x conv->RG-LRU branch."""
+    gate = jax.nn.gelu(x @ params["w_in_gate"].astype(x.dtype))
+    z = x @ params["w_in_rnn"].astype(x.dtype)
+    z = _causal_conv1d(z, params["conv_w"].astype(x.dtype))
+    h, h_last = rglru(params, z, h0)
+    y = (gate * h) @ params["w_out"].astype(x.dtype)
+    return y, h_last

@@ -1,0 +1,463 @@
+"""Composable transformer blocks for every assigned family, built for
+homogeneous `lax.scan` over depth with the PNODE checkpointing policies.
+
+A "layer" is (sequence-mix, channel-mix) with pre-norms and residuals:
+  kind 'a' : GQA attention (per-layer sliding window scalar) + GLU-MLP / MoE
+  kind 'w' : RWKV6 time-mix + RWKV channel-mix
+  kind 'r' : RG-LRU recurrent block + GLU-MLP
+
+Heterogeneous stacks (recurrentgemma's r,r,a pattern) scan over *pattern
+units*; the remainder layers are unrolled.  Per-layer sliding windows ride
+along the scan as an int array, so gemma3's 5:1 local:global stays one scan.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.depth_ode import checkpointed_scan
+from repro.nn import attention as attn_mod
+from repro.nn import moe as moe_mod
+from repro.nn import ssm as ssm_mod
+from repro.nn.layers import (glu_mlp, glu_mlp_init, layernorm, layernorm_init,
+                             rmsnorm, rmsnorm_init)
+
+Params = Dict[str, Any]
+
+
+def _norm_init(cfg: ModelConfig):
+    return layernorm_init(cfg.d_model) if cfg.norm == "layernorm" \
+        else rmsnorm_init(cfg.d_model)
+
+
+def _norm(cfg: ModelConfig, p, x):
+    return layernorm(p, x) if cfg.norm == "layernorm" else rmsnorm(p, x)
+
+
+def _pdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+# ---------------------------------------------------------------------------
+# per-kind layer init
+# ---------------------------------------------------------------------------
+
+def init_layer(key, cfg: ModelConfig, kind: str, cross: bool = False) -> Params:
+    dt = _pdtype(cfg)
+    ks = jax.random.split(key, 6)
+    p: Params = {"norm1": _norm_init(cfg), "norm2": _norm_init(cfg)}
+    if kind == "a":
+        p["attn"] = attn_mod.init_attention(
+            ks[0], cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.dh, dt)
+        if cfg.n_experts:
+            p["moe"] = moe_mod.init_moe(ks[1], cfg.d_model, cfg.d_ff,
+                                        cfg.n_experts, dt)
+        else:
+            p["mlp"] = glu_mlp_init(ks[1], cfg.d_model, cfg.d_ff, dt)
+        if cross:
+            p["norm_x"] = _norm_init(cfg)
+            p["xattn"] = attn_mod.init_attention(
+                ks[2], cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.dh, dt)
+    elif kind == "w":
+        p["tmix"] = ssm_mod.init_rwkv6(ks[0], cfg.d_model, cfg.n_heads, dt)
+        p["cmix"] = ssm_mod.init_rwkv_channel_mix(ks[1], cfg.d_model,
+                                                  cfg.d_ff, dt)
+    elif kind == "r":
+        p["rglru"] = ssm_mod.init_rglru_block(ks[0], cfg.d_model,
+                                              cfg.d_rnn or cfg.d_model,
+                                              dtype=dt)
+        p["mlp"] = glu_mlp_init(ks[1], cfg.d_model, cfg.d_ff, dt)
+    else:
+        raise ValueError(kind)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# per-kind layer apply (full-sequence / training)
+# ---------------------------------------------------------------------------
+
+def apply_layer(cfg: ModelConfig, kind: str, p: Params, x: jax.Array,
+                window, *, enc_out=None, causal: bool = True):
+    """Returns (x, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind == "a":
+        h = _norm(cfg, p["norm1"], x)
+        x = x + attn_mod.attention_block(
+            p["attn"], h, n_heads=cfg.n_heads, rope_theta=cfg.rope_theta,
+            causal=causal, window=window, impl=cfg.attn_impl)
+        if enc_out is not None:
+            hx = _norm(cfg, p["norm_x"], x)
+            x = x + attn_mod.attention_block(
+                p["xattn"], hx, n_heads=cfg.n_heads, rope_theta=0.0,
+                causal=False, window=0, impl=cfg.attn_impl, kv_x=enc_out)
+        h = _norm(cfg, p["norm2"], x)
+        if cfg.n_experts:
+            y, aux = moe_mod.moe_block(
+                p["moe"], h, n_experts=cfg.n_experts, top_k=cfg.top_k,
+                act=cfg.act, capacity_factor=cfg.capacity_factor)
+            x = x + y
+        else:
+            x = x + glu_mlp(p["mlp"], h, cfg.act)
+    elif kind == "w":
+        h = _norm(cfg, p["norm1"], x)
+        if x.shape[1] > 256:
+            y, _ = ssm_mod.rwkv6_mix_chunked(p["tmix"], h, cfg.n_heads)
+        else:
+            y, _ = ssm_mod.rwkv6_mix_scan(p["tmix"], h, cfg.n_heads)
+        x = x + y
+        h = _norm(cfg, p["norm2"], x)
+        x = x + ssm_mod.rwkv_channel_mix(p["cmix"], h)
+    elif kind == "r":
+        h = _norm(cfg, p["norm1"], x)
+        y, _ = ssm_mod.rglru_block(p["rglru"], h)
+        x = x + y
+        h = _norm(cfg, p["norm2"], x)
+        x = x + glu_mlp(p["mlp"], h, cfg.act)
+    else:
+        raise ValueError(kind)
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# stack grouping: (scan groups, unrolled remainder)
+# ---------------------------------------------------------------------------
+
+def stack_plan(cfg: ModelConfig) -> Tuple[Tuple[str, ...], int, Tuple[str, ...]]:
+    """Returns (unit_kinds, n_units, remainder_kinds).  A 'unit' is the
+    repeating pattern scanned over; remainder layers are unrolled.
+
+    Periodicity is detected over (kind, window) PAIRS, not kinds alone, so a
+    homogeneous-kind stack with a repeating window pattern (gemma3's
+    5-local:1-global) scans a 6-layer unit whose windows are *static* —
+    enabling trace-time sliding-window k-block skipping in attention."""
+    kinds = cfg.kinds
+    sig = tuple(zip(kinds, cfg.win))
+    uniq = tuple(sorted(set(sig)))
+    if len(uniq) == 1:
+        return (kinds[0],), len(kinds), ()
+    # find the shortest repeating pattern unit covering every distinct layer
+    for ulen in range(2, len(sig) + 1):
+        unit = sig[:ulen]
+        n_units = len(sig) // ulen
+        if unit * n_units == sig[:ulen * n_units] \
+                and len(set(unit)) == len(uniq):
+            rem = kinds[ulen * n_units:]
+            return tuple(k for k, _ in unit), n_units, rem
+    return tuple(kinds), 1, ()
+
+
+def init_stack(key, cfg: ModelConfig, cross: bool = False) -> Params:
+    unit, n_units, rem = stack_plan(cfg)
+    keys = jax.random.split(key, n_units + len(rem))
+
+    def unit_init(k):
+        uks = jax.random.split(k, len(unit))
+        return {f"{i}_{kind}": init_layer(uk, cfg, kind, cross)
+                for i, (kind, uk) in enumerate(zip(unit, uks))}
+
+    stacked = jax.vmap(unit_init)(keys[:n_units])
+    rem_p = {f"rem{i}_{kind}": init_layer(keys[n_units + i], cfg, kind, cross)
+             for i, kind in enumerate(rem)}
+    return {"scan": stacked, "rem": rem_p}
+
+
+def _unit_windows(cfg: ModelConfig):
+    """Per-unit window arrays (n_units, ulen) + remainder windows.
+
+    When every unit has the same window pattern (gemma3 5:1, mixtral SWA,
+    recurrentgemma 1:2 — i.e. all assigned heterogenous stacks), the windows
+    are returned as a STATIC python tuple instead of a scanned array: static
+    windows let the chunked-attention path skip k-blocks outside the sliding
+    window at trace time (16x less attention work for a 1024-window layer at
+    4k context) instead of merely masking them."""
+    unit, n_units, rem = stack_plan(cfg)
+    ulen = len(unit)
+    rows = [tuple(cfg.win[u * ulen:(u + 1) * ulen]) for u in range(n_units)]
+    w_rem = tuple(cfg.win[ulen * n_units:])
+    if all(r == rows[0] for r in rows):
+        return rows[0] if rows else (), w_rem     # static pattern
+    w = jnp.asarray(cfg.win[:ulen * n_units], jnp.int32).reshape(n_units, ulen)
+    return w, w_rem
+
+
+def apply_stack(cfg: ModelConfig, params: Params, x: jax.Array, *,
+                enc_out=None, causal: bool = True):
+    """Run the full depth stack with the configured PNODE remat policy.
+    Returns (x, aux_loss_sum)."""
+    unit, n_units, rem = stack_plan(cfg)
+    w_scan, w_rem = _unit_windows(cfg)
+
+    from repro.dist.sharding import constrain_batch
+
+    static_w = isinstance(w_scan, tuple)
+
+    def unit_fn(carry, scanned):
+        xx, aux = carry
+        up = scanned[0] if not static_w else scanned
+        wins = w_scan if static_w else scanned[1]
+        for i, kind in enumerate(unit):
+            xx, a = apply_layer(cfg, kind, up[f"{i}_{kind}"], xx, wins[i],
+                                enc_out=enc_out, causal=causal)
+            aux = aux + a
+        # keep activations batch-sharded at every layer boundary (else GSPMD
+        # may replicate them to satisfy FSDP weight shards; see dist/sharding)
+        xx = constrain_batch(xx)
+        return xx, aux
+
+    carry0 = (constrain_batch(x), jnp.zeros((), jnp.float32))
+    scanned_in = params["scan"] if static_w else (params["scan"], w_scan)
+    out = checkpointed_scan(unit_fn, carry0, scanned_in,
+                            n_units, remat=cfg.remat, ncheck=cfg.ncheck)
+    x, aux = out
+    for i, kind in enumerate(rem):
+        x, a = apply_layer(cfg, kind, params["rem"][f"rem{i}_{kind}"], x,
+                           int(w_rem[i]),
+                           enc_out=enc_out, causal=causal)
+        aux = aux + a
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# prefill (full prompt -> decode state), threading caches through the stack
+# ---------------------------------------------------------------------------
+
+def prefill_layer(cfg: ModelConfig, kind: str, p: Params, x: jax.Array,
+                  window, max_seq: int, *, enc_out=None):
+    """Full-sequence layer pass that also returns the layer's decode state."""
+    from repro.nn.layers import apply_rope
+    b, s, _ = x.shape
+    cache_dtype = jnp.dtype(cfg.compute_dtype)
+    if kind == "a":
+        h = _norm(cfg, p["norm1"], x)
+        ap = p["attn"]
+        q = jnp.einsum("bsd,dhk->bshk", h, ap["wq"].astype(h.dtype))
+        k = jnp.einsum("bsd,dhk->bshk", h, ap["wk"].astype(h.dtype))
+        v = jnp.einsum("bsd,dhk->bshk", h, ap["wv"].astype(h.dtype))
+        pos = jnp.arange(s)[None, :]
+        if cfg.rope_theta > 0:
+            q = apply_rope(q, pos, cfg.rope_theta)
+            k = apply_rope(k, pos, cfg.rope_theta)
+        o = attn_mod.attention(q, k, v, causal=True, window=window,
+                               impl=cfg.attn_impl)
+        x = x + jnp.einsum("bshk,hkd->bsd", o, ap["wo"].astype(h.dtype))
+        st = {
+            "k": jnp.zeros((b, max_seq) + k.shape[2:], cache_dtype)
+            .at[:, :s].set(k.astype(cache_dtype)),
+            "v": jnp.zeros((b, max_seq) + v.shape[2:], cache_dtype)
+            .at[:, :s].set(v.astype(cache_dtype)),
+        }
+        if enc_out is not None:
+            hx = _norm(cfg, p["norm_x"], x)
+            x = x + attn_mod.attention_block(
+                p["xattn"], hx, n_heads=cfg.n_heads, rope_theta=0.0,
+                causal=False, window=0, impl=cfg.attn_impl, kv_x=enc_out)
+        h = _norm(cfg, p["norm2"], x)
+        if cfg.n_experts:
+            # inference is dropless: capacity covers the all-tokens-to-one-
+            # expert worst case so prefill == decode == (dropless) forward
+            y, _ = moe_mod.moe_block(
+                p["moe"], h, n_experts=cfg.n_experts, top_k=cfg.top_k,
+                act=cfg.act, capacity_factor=max(cfg.capacity_factor,
+                                                 float(cfg.n_experts)))
+            x = x + y
+        else:
+            x = x + glu_mlp(p["mlp"], h, cfg.act)
+        return x, st
+    if kind == "w":
+        h = _norm(cfg, p["norm1"], x)
+        y, S = (ssm_mod.rwkv6_mix_chunked if s > 256
+                else ssm_mod.rwkv6_mix_scan)(p["tmix"], h, cfg.n_heads)
+        x = x + y
+        h2 = _norm(cfg, p["norm2"], x)
+        x = x + ssm_mod.rwkv_channel_mix(p["cmix"], h2)
+        st = {"S": S, "tm_prev": h[:, -1:].astype(cache_dtype),
+              "cm_prev": h2[:, -1:].astype(cache_dtype)}
+        return x, st
+    if kind == "r":
+        h = _norm(cfg, p["norm1"], x)
+        gate = jax.nn.gelu(h @ p["rglru"]["w_in_gate"].astype(h.dtype))
+        z = h @ p["rglru"]["w_in_rnn"].astype(h.dtype)
+        zc = ssm_mod._causal_conv1d(z, p["rglru"]["conv_w"].astype(z.dtype))
+        hseq, h_last = ssm_mod.rglru(p["rglru"], zc)
+        x = x + (gate * hseq) @ p["rglru"]["w_out"].astype(h.dtype)
+        h2 = _norm(cfg, p["norm2"], x)
+        x = x + glu_mlp(p["mlp"], h2, cfg.act)
+        st = {"h": h_last, "conv": z[:, -3:].astype(cache_dtype)}
+        return x, st
+    raise ValueError(kind)
+
+
+def prefill_stack(cfg: ModelConfig, params: Params, x: jax.Array,
+                  max_seq: int, *, enc_out=None):
+    """Plain scan (no remat — inference) producing hidden states + decode
+    state for every layer."""
+    unit, n_units, rem = stack_plan(cfg)
+    w_scan, w_rem = _unit_windows(cfg)
+
+    from repro.dist.sharding import constrain_batch
+
+    static_w = isinstance(w_scan, tuple)
+
+    def unit_fn(xx, scanned):
+        up = scanned[0] if not static_w else scanned
+        wins = w_scan if static_w else scanned[1]
+        sts = {}
+        for i, kind in enumerate(unit):
+            xx, st = prefill_layer(cfg, kind, up[f"{i}_{kind}"], xx, wins[i],
+                                   max_seq, enc_out=enc_out)
+            sts[f"{i}_{kind}"] = st
+        return constrain_batch(xx), sts
+
+    x, scan_state = jax.lax.scan(
+        unit_fn, x, params["scan"] if static_w else (params["scan"], w_scan))
+    rem_state = {}
+    for i, kind in enumerate(rem):
+        key = f"rem{i}_{kind}"
+        x, st = prefill_layer(cfg, kind, params["rem"][key], x,
+                              int(w_rem[i]), max_seq,
+                              enc_out=enc_out)
+        rem_state[key] = st
+    return x, {"scan": scan_state, "rem": rem_state}
+
+
+# ---------------------------------------------------------------------------
+# decode (single token, stateful)
+# ---------------------------------------------------------------------------
+
+def init_layer_state(cfg: ModelConfig, kind: str, batch: int, max_seq: int,
+                     cross: bool = False):
+    dh = cfg.dh
+    cache_dtype = jnp.dtype(cfg.compute_dtype)
+    if kind == "a":
+        st = {"k": jnp.zeros((batch, max_seq, cfg.n_kv_heads, dh), cache_dtype),
+              "v": jnp.zeros((batch, max_seq, cfg.n_kv_heads, dh), cache_dtype)}
+        if cross:
+            st["xk"] = jnp.zeros((batch, cfg.enc_seq, cfg.n_kv_heads, dh),
+                                 cache_dtype)
+            st["xv"] = jnp.zeros((batch, cfg.enc_seq, cfg.n_kv_heads, dh),
+                                 cache_dtype)
+        return st
+    if kind == "w":
+        return {
+            "S": jnp.zeros((batch, cfg.n_heads, dh, dh), jnp.float32),
+            "tm_prev": jnp.zeros((batch, 1, cfg.d_model), cache_dtype),
+            "cm_prev": jnp.zeros((batch, 1, cfg.d_model), cache_dtype),
+        }
+    if kind == "r":
+        dr = cfg.d_rnn or cfg.d_model
+        return {"h": jnp.zeros((batch, dr), jnp.float32),
+                "conv": jnp.zeros((batch, 3, dr), cache_dtype)}
+    raise ValueError(kind)
+
+
+def decode_layer(cfg: ModelConfig, kind: str, p: Params, x: jax.Array,
+                 state, pos, window, *, enc_out=None):
+    """One-token decode through a single layer.  x: (B,1,D)."""
+    if kind == "a":
+        h = _norm(cfg, p["norm1"], x)
+        y, ck, cv = attn_mod.decode_attention_block(
+            p["attn"], h, state["k"], state["v"], pos,
+            n_heads=cfg.n_heads, rope_theta=cfg.rope_theta, window=window)
+        state = dict(state, k=ck, v=cv)
+        x = x + y
+        if enc_out is not None:
+            hx = _norm(cfg, p["norm_x"], x)
+            y = attn_mod.attention_block(
+                p["xattn"], hx, n_heads=cfg.n_heads, rope_theta=0.0,
+                causal=False, window=0, impl="naive", kv_x=enc_out)
+            x = x + y
+        h = _norm(cfg, p["norm2"], x)
+        if cfg.n_experts:
+            y, _ = moe_mod.moe_block(
+                p["moe"], h, n_experts=cfg.n_experts, top_k=cfg.top_k,
+                act=cfg.act, capacity_factor=max(cfg.capacity_factor,
+                                                 float(cfg.n_experts)))
+            x = x + y
+        else:
+            x = x + glu_mlp(p["mlp"], h, cfg.act)
+        return x, state
+    if kind == "w":
+        h = _norm(cfg, p["norm1"], x)
+        y, S = ssm_mod.rwkv6_mix_decode(p["tmix"], state["tm_prev"], h,
+                                        state["S"], cfg.n_heads)
+        x = x + y
+        new_tm = h.astype(state["tm_prev"].dtype)
+        h2 = _norm(cfg, p["norm2"], x)
+        hh2 = jnp.concatenate([state["cm_prev"].astype(h2.dtype), h2], axis=1)
+        y2 = ssm_mod.rwkv_channel_mix(p["cmix"], hh2)[:, 1:]
+        x = x + y2
+        state = dict(state, S=S, tm_prev=new_tm,
+                     cm_prev=h2.astype(state["cm_prev"].dtype))
+        return x, state
+    if kind == "r":
+        h = _norm(cfg, p["norm1"], x)
+        gate = jax.nn.gelu(h @ p["rglru"]["w_in_gate"].astype(h.dtype))
+        z = h @ p["rglru"]["w_in_rnn"].astype(h.dtype)
+        zw = jnp.concatenate([state["conv"].astype(z.dtype), z], axis=1)
+        z = ssm_mod._causal_conv1d(zw, p["rglru"]["conv_w"].astype(z.dtype))[:, -1:]
+        hseq, h_last = ssm_mod.rglru(p["rglru"], z, state["h"])
+        y = (gate * hseq) @ p["rglru"]["w_out"].astype(h.dtype)
+        x = x + y
+        h2 = _norm(cfg, p["norm2"], x)
+        x = x + glu_mlp(p["mlp"], h2, cfg.act)
+        state = dict(state, h=h_last,
+                     conv=zw[:, 1:].astype(state["conv"].dtype))
+        return x, state
+    raise ValueError(kind)
+
+
+def init_stack_state(cfg: ModelConfig, batch: int, max_seq: int,
+                     cross: bool = False):
+    unit, n_units, rem = stack_plan(cfg)
+
+    def unit_state(_):
+        return {f"{i}_{kind}": init_layer_state(cfg, kind, batch, max_seq, cross)
+                for i, kind in enumerate(unit)}
+
+    scan_state = jax.vmap(unit_state)(jnp.arange(n_units))
+    rem_state = {f"rem{i}_{kind}": init_layer_state(cfg, kind, batch, max_seq,
+                                                    cross)
+                 for i, kind in enumerate(rem)}
+    return {"scan": scan_state, "rem": rem_state}
+
+
+def decode_stack(cfg: ModelConfig, params: Params, state, x: jax.Array,
+                 pos, *, enc_out=None):
+    unit, n_units, rem = stack_plan(cfg)
+    w_scan, w_rem = _unit_windows(cfg)
+
+    from repro.dist.sharding import constrain_batch
+
+    static_w = isinstance(w_scan, tuple)
+
+    def unit_fn(carry, scanned):
+        xx = carry
+        if static_w:
+            up, ust = scanned
+            wins = w_scan
+        else:
+            up, ust, wins = scanned
+        new_st = {}
+        for i, kind in enumerate(unit):
+            xx, st = decode_layer(cfg, kind, up[f"{i}_{kind}"], xx,
+                                  ust[f"{i}_{kind}"], pos, wins[i],
+                                  enc_out=enc_out)
+            new_st[f"{i}_{kind}"] = st
+        return constrain_batch(xx), new_st
+
+    x, scan_state = jax.lax.scan(
+        unit_fn, x,
+        (params["scan"], state["scan"]) if static_w
+        else (params["scan"], state["scan"], w_scan))
+    rem_state = {}
+    for i, kind in enumerate(rem):
+        key = f"rem{i}_{kind}"
+        x, st = decode_layer(cfg, kind, params["rem"][key], x,
+                             state["rem"][key], pos,
+                             int(w_rem[i]), enc_out=enc_out)
+        rem_state[key] = st
+    return x, {"scan": scan_state, "rem": rem_state}

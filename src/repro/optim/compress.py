@@ -1,0 +1,118 @@
+"""Gradient compression for cross-pod reduction (distributed-optimization
+trick, §6 of DESIGN.md).
+
+Two composable schemes:
+
+* ``bf16``  — cast fp32 grads to bf16 before the pod-axis all-reduce and
+  back after: halves the slowest collective's bytes for ~0 quality cost at
+  LM scale.  Stateless.
+
+* ``int8``  — per-leaf symmetric int8 quantization with *error feedback*
+  (the residual from quantization is carried into the next step), the
+  standard trick that keeps SGD/Adam convergence with aggressive
+  compression.  4x fewer bytes on the wire.
+
+Both are expressed as (compress, decompress) around a reduction closure so
+they drop into either a jit'd psum (shard_map) or the implicit GSPMD
+all-reduce of a pjit'd grad — the dry-run path uses ``compressed_psum``
+inside shard_map so the wire dtype is visible in the lowered HLO.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import tree_util as jtu
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# bf16 wire compression
+# ---------------------------------------------------------------------------
+
+def bf16_compress(grads: PyTree) -> PyTree:
+    return jtu.tree_map(lambda g: g.astype(jnp.bfloat16), grads)
+
+
+def bf16_decompress(grads: PyTree) -> PyTree:
+    return jtu.tree_map(lambda g: g.astype(jnp.float32), grads)
+
+
+# ---------------------------------------------------------------------------
+# int8 + error feedback
+# ---------------------------------------------------------------------------
+
+def int8_init(grads_shape: PyTree) -> PyTree:
+    """Error-feedback residual state (zeros like the grads)."""
+    return jtu.tree_map(lambda g: jnp.zeros(g.shape, jnp.float32),
+                        grads_shape)
+
+
+def int8_quantize(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def int8_dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def int8_compress(grads: PyTree, residual: PyTree):
+    """Returns ((q, scales), new_residual).  new_residual = g+r - deq(q)."""
+    def one(g, r):
+        gr = g + r
+        q, s = int8_quantize(gr)
+        return (q, s), gr - int8_dequantize(q, s)
+
+    pairs = jtu.tree_map(one, grads, residual)
+    qs = jtu.tree_map(lambda p: p[0], pairs,
+                      is_leaf=lambda x: isinstance(x, tuple))
+    res = jtu.tree_map(lambda p: p[1], pairs,
+                       is_leaf=lambda x: isinstance(x, tuple))
+    return qs, res
+
+
+def int8_decompress(qs: PyTree) -> PyTree:
+    return jtu.tree_map(lambda p: int8_dequantize(*p), qs,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+# ---------------------------------------------------------------------------
+# compressed cross-pod reduction (shard_map building block)
+# ---------------------------------------------------------------------------
+
+def compressed_psum(grads: PyTree, axis_name: str,
+                    scheme: str = "bf16") -> PyTree:
+    """All-reduce ``grads`` over ``axis_name`` with wire compression.
+
+    bf16: psum in bf16 (half the bytes on the slow inter-pod links).
+    int8: each participant all-gathers (q, scale) — int8 payload — and sums
+    the dequantized shards locally, so the wire carries 1/4 the bytes at the
+    cost of a gather instead of a tree-reduce.
+    """
+    if scheme == "none":
+        return jax.lax.psum(grads, axis_name)
+    if scheme == "bf16":
+        g16 = bf16_compress(grads)
+        summed = jax.lax.psum(g16, axis_name)
+        return bf16_decompress(summed)
+    if scheme == "int8":
+        def one(g):
+            q, s = int8_quantize(g)
+            qs = jax.lax.all_gather(q, axis_name)      # int8 on the wire
+            ss = jax.lax.all_gather(s, axis_name)
+            deq = qs.astype(jnp.float32) \
+                * ss.reshape((-1,) + (1,) * g.ndim)
+            return deq.sum(axis=0)
+        return jtu.tree_map(one, grads)
+    raise ValueError(f"unknown compression scheme {scheme!r}")
+
+
+def wire_bytes(grads: PyTree, scheme: str = "bf16") -> int:
+    """Bytes a single participant puts on the wire for one reduction."""
+    per = {"none": 4, "bf16": 2, "int8": 1}[scheme]
+    return sum(leaf.size * per for leaf in jtu.tree_leaves(grads))

@@ -1,0 +1,17 @@
+"""Shared fixtures.  NOTE: XLA_FLAGS / device-count forcing is deliberately
+NOT set here — smoke tests and benches see the real single CPU device.
+Multi-device tests spawn subprocesses (see tests/util.py)."""
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session", autouse=True)
+def _x64_off():
+    # the framework targets bf16/f32; tests that need f64 enable it locally
+    # via jax.experimental.enable_x64.
+    yield
+
+
+@pytest.fixture
+def rng():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,84 @@
+"""Fault tolerance: watchdog, straggler detection, elastic re-mesh plans,
+and the end-to-end kill/restart determinism contract."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ShapeCell, reduced
+from repro.configs.registry import get_arch
+from repro.ft import (Heartbeat, StragglerDetector, TrainSupervisor,
+                      elastic_remesh_plan)
+from repro.launch.train import train
+
+
+def test_heartbeat_fires_on_stall():
+    fired = []
+    hb = Heartbeat(timeout_s=0.15, on_stall=fired.append, poll_s=0.02)
+    hb.start()
+    hb.beat()
+    time.sleep(0.5)
+    hb.stop()
+    assert fired and fired[0] > 0.15
+    assert hb.stall_count == 1  # fires once per stall, not per poll
+
+
+def test_heartbeat_quiet_when_beating():
+    fired = []
+    hb = Heartbeat(timeout_s=0.3, on_stall=fired.append, poll_s=0.02)
+    hb.start()
+    for _ in range(10):
+        hb.beat()
+        time.sleep(0.05)
+    hb.stop()
+    assert not fired
+
+
+def test_straggler_detection():
+    det = StragglerDetector(window=20, k_mad=6.0, min_abs_s=0.0, warmup=3)
+    flagged = [det.record(0.1 + 0.001 * i) for i in range(10)]
+    assert not any(flagged)
+    assert det.record(1.0)            # 10x the median -> straggler
+    assert not det.record(0.1)        # baseline unpolluted by the outlier
+    assert det.flagged_steps == [11]
+
+
+def test_elastic_remesh_plan():
+    assert elastic_remesh_plan(256, 16, lost=0) == (16, 16)
+    assert elastic_remesh_plan(256, 16, lost=16) == (15, 16)
+    assert elastic_remesh_plan(256, 16, lost=1) == (15, 16)  # round down
+    with pytest.raises(RuntimeError):
+        elastic_remesh_plan(16, 16, lost=1)
+
+
+def test_supervisor_integration():
+    sup = TrainSupervisor(heartbeat_timeout_s=60.0)
+    with sup:
+        for i in range(5):
+            sup.step(lambda: time.sleep(0.01), i)
+    assert len(sup.step_times) == 5
+
+
+def test_kill_restart_replays_identically(tmp_path):
+    """The paper-scale FT contract: train 10 steps with checkpoints, then
+    restart from step 5 — losses 5..9 must be bit-identical (deterministic
+    data pipeline + full optimizer state in the checkpoint)."""
+    cfg = reduced(get_arch("smollm-135m"), n_layers=2)
+    cell = ShapeCell("t", 2, 32, "train") and ShapeCell("t", 32, 2, "train")
+
+    run1 = train(cfg, cell, steps=10, ckpt_dir=str(tmp_path / "a"),
+                 ckpt_every=5, log_fn=lambda *_: None)
+    # second job: restores the step-5 (and later step-10) checkpoint; force
+    # restart from 5 by removing later checkpoints
+    import shutil
+    from repro.ckpt.checkpoint import available_steps
+    for s in available_steps(tmp_path / "a"):
+        if s > 5:
+            shutil.rmtree(tmp_path / "a" / f"step_{s:010d}")
+    run2 = train(cfg, cell, steps=10, ckpt_dir=str(tmp_path / "a"),
+                 ckpt_every=100, log_fn=lambda *_: None)
+    assert run2["resumed_from"] == 5
+    np.testing.assert_array_equal(np.asarray(run1["losses"][5:]),
+                                  np.asarray(run2["losses"]))

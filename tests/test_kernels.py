@@ -1,0 +1,151 @@
+"""Per-kernel allclose vs the pure-jnp oracles, sweeping shapes/dtypes
+(interpret mode on CPU) + hypothesis property tests on the invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention_bhsd
+from repro.kernels.rwkv6_scan import rwkv6_chunked_bhsd
+
+TOL = {jnp.float32: dict(rtol=2e-5, atol=2e-5),
+       jnp.bfloat16: dict(rtol=5e-2, atol=5e-2)}
+
+
+def _qkv(key, b, h, hkv, sq, sk, dh, dtype):
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, h, sq, dh), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (b, hkv, sk, dh), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (b, hkv, sk, dh), jnp.float32).astype(dtype)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,h,hkv,s,dh,bq,bk", [
+    (1, 4, 4, 128, 64, 64, 64),     # MHA
+    (2, 4, 2, 128, 64, 64, 64),     # GQA 2:1
+    (1, 8, 1, 256, 32, 128, 64),    # MQA
+    (1, 4, 4, 200, 64, 128, 128),   # ragged: S not multiple of block
+    (1, 2, 2, 64, 128, 64, 64),     # wide head
+])
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 48),
+                                           (False, 0)])
+def test_flash_attention_allclose(b, h, hkv, s, dh, bq, bk, causal, window,
+                                  dtype):
+    q, k, v = _qkv(jax.random.PRNGKey(0), b, h, hkv, s, s, dh, dtype)
+    out = flash_attention_bhsd(q, k, v, causal=causal, window=window,
+                               block_q=bq, block_k=bk)
+    expected = ref.attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(expected, np.float32),
+        **TOL[dtype])
+
+
+def test_flash_attention_cross_lengths():
+    """Sq != Sk (cross attention / prefix decoding)."""
+    q, k, v = _qkv(jax.random.PRNGKey(1), 1, 4, 4, 64, 192, 64, jnp.float32)
+    out = flash_attention_bhsd(q, k, v, causal=False, block_q=64, block_k=64)
+    expected = ref.attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expected),
+                               rtol=2e-5, atol=2e-5)
+
+
+@given(s=st.integers(16, 160), dh=st.sampled_from([32, 64]),
+       h=st.sampled_from([2, 4]), group=st.sampled_from([1, 2]))
+@settings(max_examples=12, deadline=None)
+def test_flash_attention_property(s, dh, h, group):
+    hkv = h // group
+    q, k, v = _qkv(jax.random.PRNGKey(s), 1, h, hkv, s, s, dh, jnp.float32)
+    out = flash_attention_bhsd(q, k, v, causal=True, block_q=64, block_k=64)
+    expected = ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expected),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_flash_attention_model_layout_wrapper():
+    b, s, h, dh = 2, 96, 4, 32
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (b, s, h, dh))
+    k = jax.random.normal(ks[1], (b, s, h, dh))
+    v = jax.random.normal(ks[2], (b, s, h, dh))
+    out = ops.flash_attention(q, k, v, causal=True, block_q=64, block_k=64)
+    expected = jnp.moveaxis(
+        ref.attention_ref(jnp.moveaxis(q, 1, 2), jnp.moveaxis(k, 1, 2),
+                          jnp.moveaxis(v, 1, 2), causal=True), 1, 2)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expected),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# rwkv6 chunked recurrence
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,h,s,dh,chunk", [
+    (1, 2, 128, 32, 32),
+    (2, 4, 128, 64, 64),
+    (1, 2, 256, 64, 64),
+    (1, 1, 64, 128, 16),
+])
+def test_rwkv6_allclose(b, h, s, dh, chunk, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    r = jax.random.normal(ks[0], (b, h, s, dh), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (b, h, s, dh), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (b, h, s, dh), jnp.float32).astype(dtype)
+    logw = -jnp.exp(
+        jax.random.normal(ks[3], (b, h, s, dh), jnp.float32) * 0.5
+    ).astype(dtype)
+    u = (0.1 * jax.random.normal(ks[4], (h, dh), jnp.float32)).astype(dtype)
+    out, sfin = rwkv6_chunked_bhsd(r, k, v, logw, u, chunk=chunk)
+    oref, sref = ref.rwkv6_ref(r, k, v, logw, u)
+    # chunked product-form vs sequential scan: different f32 rounding paths,
+    # error grows ~sqrt(S); bf16 inputs add quantization noise
+    tol = (dict(rtol=2e-2, atol=1e-3) if dtype != jnp.bfloat16
+           else dict(rtol=0.15, atol=0.15))
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(oref, np.float32), **tol)
+    np.testing.assert_allclose(np.asarray(sfin, np.float32),
+                               np.asarray(sref, np.float32), **tol)
+
+
+@given(s=st.sampled_from([32, 96, 160]), chunk=st.sampled_from([16, 32]),
+       dh=st.sampled_from([16, 32]))
+@settings(max_examples=10, deadline=None)
+def test_rwkv6_property_padding(s, chunk, dh):
+    """The ops wrapper pads ragged S and strips it — results must match the
+    unpadded oracle exactly on the first S positions."""
+    b, h = 1, 2
+    ks = jax.random.split(jax.random.PRNGKey(s * 7 + chunk), 5)
+    mk = lambda k_: jax.random.normal(k_, (b, s, h, dh), jnp.float32)
+    r, k, v = mk(ks[0]), mk(ks[1]), mk(ks[2])
+    logw = -jnp.exp(jax.random.normal(ks[3], (b, s, h, dh)) * 0.5)
+    u = 0.1 * jax.random.normal(ks[4], (h, dh))
+    out, _ = ops.rwkv6_chunked(r, k, v, logw, u, chunk=chunk)
+    oref, _ = ref.rwkv6_ref(*(jnp.moveaxis(t, 1, 2) for t in (r, k, v, logw)),
+                            u)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(jnp.moveaxis(oref, 1, 2)),
+                               rtol=2e-2, atol=1e-3)
+
+
+def test_rwkv6_state_carries_across_chunks():
+    """Chunked result must be independent of the chunk size."""
+    b, h, s, dh = 1, 2, 128, 32
+    ks = jax.random.split(jax.random.PRNGKey(3), 5)
+    mk = lambda k_: jax.random.normal(k_, (b, h, s, dh))
+    r, k, v = mk(ks[0]), mk(ks[1]), mk(ks[2])
+    logw = -jnp.exp(jax.random.normal(ks[3], (b, h, s, dh)) * 0.5)
+    u = 0.1 * jax.random.normal(ks[4], (h, dh))
+    o1, s1 = rwkv6_chunked_bhsd(r, k, v, logw, u, chunk=16)
+    o2, s2 = rwkv6_chunked_bhsd(r, k, v, logw, u, chunk=64)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), rtol=2e-2,
+                               atol=1e-3)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=2e-2,
+                               atol=1e-3)

@@ -1,0 +1,81 @@
+"""MoE invariants (hypothesis): dropless conservation of gate mass, capacity
+monotonicity, and exactness vs a dense per-token reference."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.nn.moe import init_moe, moe_block
+
+
+def _dense_ref(params, x, n_experts, top_k, act="silu"):
+    """Per-token dense reference: run every token through its top-k experts
+    directly (no capacity, no dispatch)."""
+    from repro.nn.layers import act_fn
+    b, s, d = x.shape
+    xf = x.reshape(-1, d)
+    logits = xf.astype(jnp.float32) @ params["w_router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gv, gi = jax.lax.top_k(probs, top_k)
+    gv = gv / jnp.maximum(gv.sum(-1, keepdims=True), 1e-9)
+    out = jnp.zeros_like(xf)
+    for e in range(n_experts):
+        g = act_fn(act)(xf @ params["w_gate"][e])
+        u = xf @ params["w_up"][e]
+        y = (g * u) @ params["w_down"][e]
+        w = jnp.where(gi == e, gv, 0.0).sum(-1)
+        out = out + y * w[:, None]
+    return out.reshape(b, s, d)
+
+
+@given(e=st.sampled_from([2, 4]), k=st.sampled_from([1, 2]),
+       t=st.sampled_from([16, 32]))
+@settings(max_examples=8, deadline=None)
+def test_dropless_matches_dense_reference(e, k, t):
+    params = init_moe(jax.random.PRNGKey(0), 16, 32, e)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, t, 16))
+    out, _ = moe_block(params, x, n_experts=e, top_k=k,
+                       capacity_factor=float(e))   # dropless
+    ref = _dense_ref(params, x, e, k)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_capacity_dropping_reduces_output_mass():
+    """Tiny capacity must drop tokens (outputs shrink toward zero), and
+    capacity is monotone."""
+    e, k = 4, 2
+    params = init_moe(jax.random.PRNGKey(0), 16, 32, e)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 64, 16))
+    norms = []
+    for cf in (0.25, 1.0, float(e)):
+        out, _ = moe_block(params, x, n_experts=e, top_k=k,
+                           capacity_factor=cf)
+        norms.append(float(jnp.linalg.norm(out)))
+    assert norms[0] < norms[2]
+    assert norms[1] <= norms[2] + 1e-5
+
+
+def test_aux_loss_uniform_router_is_one():
+    """With a uniform router, Switch aux loss -> E * E * (1/E)*(1/E) = 1."""
+    e = 4
+    params = init_moe(jax.random.PRNGKey(0), 16, 32, e)
+    params = dict(params, w_router=jnp.zeros_like(params["w_router"]))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 128, 16))
+    _, aux = moe_block(params, x, n_experts=e, top_k=1,
+                       capacity_factor=float(e))
+    np.testing.assert_allclose(float(aux), 1.0, atol=0.1)
+
+
+def test_group_size_invariance_when_dropless():
+    e, k = 4, 2
+    params = init_moe(jax.random.PRNGKey(0), 16, 32, e)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, 16))
+    o1, _ = moe_block(params, x, n_experts=e, top_k=k,
+                      capacity_factor=float(e), group_size=16)
+    o2, _ = moe_block(params, x, n_experts=e, top_k=k,
+                      capacity_factor=float(e), group_size=128)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), rtol=2e-4,
+                               atol=2e-4)

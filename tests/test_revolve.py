@@ -1,0 +1,92 @@
+"""Checkpoint-schedule properties: the DP optimum matches the paper's
+Prop. 2 closed form; emitted schedules are executable and achieve the
+optimum; peak slot usage never exceeds N_c (hypothesis property tests)."""
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.revolve import (optimal_extra_steps,
+                                prop2_optimal_extra_steps, reverse_schedule,
+                                schedule_extra_steps,
+                                sweep_checkpoint_positions)
+
+
+@given(n_t=st.integers(2, 60), n_c=st.integers(1, 12))
+@settings(max_examples=200, deadline=None)
+def test_dp_matches_prop2(n_t, n_c):
+    assert optimal_extra_steps(n_t, n_c) == prop2_optimal_extra_steps(n_t, n_c)
+
+
+@pytest.mark.parametrize("n_t,n_c,expected_t", [
+    # binom(c+t-1, t-1) < n <= binom(c+t, t): spot values from the paper
+    (10, 3, 2),   # binom(4,1)=4 < 10 <= binom(5,2)=10 -> t=2
+    (11, 3, 3),   # 10 < 11 <= binom(6,3)=20 -> t=3
+])
+def test_prop2_bracketing(n_t, n_c, expected_t):
+    from math import comb
+    t = expected_t
+    assert comb(n_c + t - 1, t - 1) < n_t <= comb(n_c + t, t)
+    assert prop2_optimal_extra_steps(n_t, n_c) \
+        == (t - 1) * n_t - comb(n_c + t, t - 1) + 1
+
+
+def _simulate(n_t, n_c):
+    """Execute the schedule symbolically; returns (adjointed order,
+    extra steps, peak extra slots held)."""
+    held = {0}  # boundary
+    for p in sweep_checkpoint_positions(n_t, n_c):
+        held.add(p)
+    assert len(held) - 1 <= n_c, "sweep placed too many checkpoints"
+    peak = len(held)
+    adjointed = []
+    extra = 0
+    for act in reverse_schedule(n_t, n_c):
+        if act[0] == "advance":
+            _, start, m = act
+            assert start in held, f"advance from unheld {start}"
+            held.add(start + m)
+            extra += m
+        elif act[0] == "adjoint":
+            idx = act[1]
+            assert idx in held, f"adjoint of unheld {idx}"
+            held.discard(idx)
+            adjointed.append(idx)
+        elif act[0] == "free":
+            held.discard(act[1])
+        peak = max(peak, len(held))
+    return adjointed, extra, peak
+
+
+@given(n_t=st.integers(2, 40), n_c=st.integers(1, 8))
+@settings(max_examples=150, deadline=None)
+def test_schedule_is_valid_and_optimal(n_t, n_c):
+    adjointed, extra, peak = _simulate(n_t, n_c)
+    # every step adjointed exactly once, in reverse order
+    assert adjointed == list(range(n_t - 1, -1, -1))
+    # achieves the DP optimum
+    assert extra == optimal_extra_steps(n_t, n_c)
+    # never holds more than N_c checkpoints beyond the boundary
+    assert peak <= n_c + 1
+
+
+@given(n_t=st.integers(2, 40))
+@settings(max_examples=50, deadline=None)
+def test_all_checkpoints_means_no_recompute(n_t):
+    """PNODE store-all: with n_c >= n_t - 1 there is zero recomputation."""
+    assert optimal_extra_steps(n_t, n_t - 1) == 0
+    _, extra, _ = _simulate(n_t, n_t - 1)
+    assert extra == 0
+
+
+@given(n_t=st.integers(2, 30), n_c=st.integers(1, 8))
+@settings(max_examples=100, deadline=None)
+def test_monotone_in_budget(n_t, n_c):
+    """More checkpoint slots never hurt."""
+    assert optimal_extra_steps(n_t, n_c + 1) <= optimal_extra_steps(n_t, n_c)
+
+
+def test_schedule_counter_matches_simulation():
+    for n_t, n_c in [(13, 2), (29, 4), (40, 3)]:
+        acts = reverse_schedule(n_t, n_c)
+        _, extra, _ = _simulate(n_t, n_c)
+        assert schedule_extra_steps(acts) == extra
