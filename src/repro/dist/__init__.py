@@ -1,0 +1,13 @@
+"""Distribution layer: GSPMD sharding rules + pipeline parallelism.
+
+``sharding``  — per-family PartitionSpec rules for params / optimizer state /
+                batches / decode state, and in-graph sharding constraints
+                (``constrain_batch`` / ``constrain_dims``) that are no-ops
+                outside a mesh context.
+``pipeline``  — microbatched pipeline parallelism over a ``pod`` mesh axis
+                via ``shard_map`` (GPipe schedule, exact vs. the sequential
+                reference).
+"""
+from repro.dist import pipeline, sharding
+
+__all__ = ["pipeline", "sharding"]

@@ -1,5 +1,11 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# default to a pod's worth of fake host devices for the production-mesh CLI,
+# but never stomp a caller that already forced its own device count (other
+# XLA_FLAGS, e.g. --xla_dump_to, are preserved and the count appended)
+if "--xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                               " --xla_force_host_platform_device_count=512"
+                               ).strip()
 
 """Multi-pod dry-run: lower + compile every (architecture x input-shape) cell
 on the production meshes, prove memory fits, and extract roofline terms.

@@ -148,14 +148,14 @@ def _shard_attention_inputs(q, k, v):
     archs whose head count doesn't divide the TP axis (smollm 9H, gemma3 8H
     on model=16) compute attention fully replicated across 'model' — 16x
     redundant FLOPs/bytes (measured on the smollm train_4k dry-run)."""
-    from repro.dist.sharding import _current_mesh
+    from repro.dist.sharding import _current_mesh, batch_axes
     mesh = _current_mesh()
     if mesh is None or "model" not in getattr(mesh, "axis_names", ()):
         return q, k, v
     import jax as _jax
     from jax.sharding import NamedSharding, PartitionSpec as P
     n = mesh.shape["model"]
-    ba = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    ba = batch_axes(mesh)
     nb = 1
     for a in ba:
         nb *= mesh.shape[a]
@@ -170,10 +170,11 @@ def _shard_attention_inputs(q, k, v):
         spec = P(bspec, None, "model", None)
         return cons(q, spec), cons(k, spec), cons(v, spec)
     if q.shape[1] % n == 0:
-        # context parallelism: queries sharded over seq, k/v replicated
+        # context parallelism: queries sharded over seq; k/v left to GSPMD
+        # propagation (an explicit replication pin here segfaults the
+        # XLA:CPU SPMD partitioner and buys nothing — k/v are gathered
+        # against the seq-sharded q either way)
         q = cons(q, P(bspec, "model", None, None))
-        kv_spec = P(bspec, None, None, None)
-        return q, cons(k, kv_spec), cons(v, kv_spec)
     return q, k, v
 
 

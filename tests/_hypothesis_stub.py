@@ -1,0 +1,80 @@
+"""Minimal offline stand-in for the slice of the `hypothesis` API our
+property tests use (``given`` / ``settings`` / ``strategies.integers`` /
+``strategies.sampled_from``).
+
+The real hypothesis is declared in pyproject's test extras and is used
+whenever importable; this fallback keeps the suite runnable in hermetic
+containers by replaying ``max_examples`` deterministic pseudo-random draws
+per test (seeded per test name, so failures reproduce).  No shrinking, no
+database — just example generation.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import types
+from typing import Any, Callable, Sequence
+
+_DEFAULT_EXAMPLES = 25
+
+
+class _Strategy:
+    def __init__(self, draw: Callable[[random.Random], Any]):
+        self._draw = draw
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda r: r.randint(min_value, max_value))
+
+
+def sampled_from(options: Sequence[Any]) -> _Strategy:
+    opts = list(options)
+    return _Strategy(lambda r: r.choice(opts))
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda r: r.choice([False, True]))
+
+
+def floats(min_value: float, max_value: float) -> _Strategy:
+    return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+
+st = strategies = types.SimpleNamespace(
+    integers=integers, sampled_from=sampled_from, booleans=booleans,
+    floats=floats)
+
+
+def settings(max_examples: int | None = None, **_kw):
+    """Records max_examples on the test fn for ``given`` to pick up; every
+    other hypothesis knob (deadline, ...) is irrelevant here and ignored."""
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(**strats: _Strategy):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            # @settings may sit above OR below @given: check the wrapper
+            # (settings applied after given) before the inner fn
+            n = getattr(wrapper, "_stub_max_examples", None) \
+                or getattr(fn, "_stub_max_examples", None) \
+                or _DEFAULT_EXAMPLES
+            rnd = random.Random(fn.__name__)
+            for _ in range(n):
+                drawn = {k: s._draw(rnd) for k, s in strats.items()}
+                fn(*args, **kwargs, **drawn)
+
+        # hide the drawn params from pytest's fixture resolution: expose only
+        # the remaining (fixture) parameters, like real hypothesis does
+        params = [p for name, p in
+                  inspect.signature(fn).parameters.items()
+                  if name not in strats]
+        del wrapper.__wrapped__
+        wrapper.__signature__ = inspect.Signature(params)
+        return wrapper
+    return deco

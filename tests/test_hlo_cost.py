@@ -93,6 +93,7 @@ def test_bytes_scale_with_trip_count():
     assert c10.bytes == pytest.approx(2 * c5.bytes, rel=0.1)
 
 
+@pytest.mark.slow
 def test_collectives_inside_scan_multiplied():
     out = run_with_devices("""
 from jax.experimental.shard_map import shard_map

@@ -2,8 +2,11 @@
 Prop. 2 closed form; emitted schedules are executable and achieve the
 optimum; peak slot usage never exceeds N_c (hypothesis property tests)."""
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # hermetic container: deterministic fallback examples
+    from tests._hypothesis_stub import given, settings, st
 
 from repro.core.revolve import (optimal_extra_steps,
                                 prop2_optimal_extra_steps, reverse_schedule,
