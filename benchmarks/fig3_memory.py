@@ -40,27 +40,41 @@ POLICIES = [("naive", {}), ("continuous", {}), ("aca", {}), ("pnode", {}),
 
 
 def main(method: str = "dopri5") -> None:
+    from repro.mem.model import f_activation_bytes, policy_cost, tree_bytes
+
     f, u0, th = _problem()
     nts = (2, 5, 8, 11)
-    print(f"== fig3_memory ({method}): compiled temp bytes (MiB) vs N_t ==")
+    state_b = tree_bytes(u0)
+    theta_b = tree_bytes(th)
+    fa = f_activation_bytes(f, u0, th)
+    print(f"== fig3_memory ({method}): compiled temp bytes (MiB) vs N_t, "
+          "measured | model-predicted ==")
     print(fmt_row("policy", *[f"N_t={n}" for n in nts], "slope MiB/step",
-                  widths=[12] + [10] * len(nts) + [15]))
+                  widths=[12] + [14] * len(nts) + [15]))
     rows = {}
     for pol, kw in POLICIES:
-        mibs = []
+        mibs, preds = [], []
         for n in nts:
+            # the planner's validity rule: at most one slot per step
+            nkw = {k: min(v, n - 1) for k, v in kw.items()}
+
             def L(u0, th):
                 uf = odeint(f, u0, th, dt=0.5 / n, n_steps=n, method=method,
-                            adjoint=pol, **kw)
+                            adjoint=pol, **nkw)
                 return jnp.sum(uf ** 2)
 
             mem = compiled_bytes(
                 lambda u0, th: jax.grad(L, argnums=(0, 1))(u0, th), u0, th)
             mibs.append(mem["temp"] / 2 ** 20)
+            preds.append(policy_cost(
+                pol, method=method, n_steps=n, state_bytes=state_b,
+                theta_bytes=theta_b, f_act_bytes=fa,
+                ncheck=nkw.get("ncheck")).peak_bytes / 2 ** 20)
         slope = (mibs[-1] - mibs[0]) / (nts[-1] - nts[0])
         rows[pol] = slope
-        print(fmt_row(pol, *[f"{m:.2f}" for m in mibs], f"{slope:.3f}",
-                      widths=[12] + [10] * len(nts) + [15]))
+        print(fmt_row(pol, *[f"{m:.2f}|{p:.2f}" for m, p in zip(mibs, preds)],
+                      f"{slope:.3f}",
+                      widths=[12] + [14] * len(nts) + [15]))
     if rows.get("naive", 0) > 0:
         print(f"PNODE slope / naive slope = "
               f"{rows['pnode'] / rows['naive']:.3f} "

@@ -1,0 +1,105 @@
+"""repro.mem planner: predicted vs measured reverse-pass memory + the
+offload win, written to BENCH_2.json so the perf trajectory is tracked.
+
+For a mid-sized neural vector field the section sweeps byte budgets,
+lets ``plan_odeint`` choose the policy, and records
+
+  * the analytic Table-2 prediction (ckpt + working-set bytes, NFE-B),
+  * the measured peak of the lowered reverse pass (hlo_cost liveness and
+    XLA's memory_analysis temp bytes),
+  * whether the chosen policy actually fits the budget,
+
+plus a pnode vs pnode+spill comparison showing the offload store removes
+the O(N_t) checkpoint term from compiled device-live memory.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import fmt_row
+from repro.mem.model import measure_reverse_cost, tree_bytes
+from repro.mem.planner import plan_odeint
+
+D, HID, BATCH = 32, 64, 4
+
+
+def _problem():
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    u0 = jax.random.normal(ks[0], (BATCH, D))
+    th = {"w1": 0.05 * jax.random.normal(ks[1], (D, HID)),
+          "w2": 0.05 * jax.random.normal(ks[2], (HID, D))}
+
+    def f(u, theta, t):
+        return jnp.tanh(u @ theta["w1"]) @ theta["w2"]
+
+    return f, u0, th
+
+
+def main(smoke: bool = False, out_path: str = "BENCH_2.json") -> dict:
+    f, u0, th = _problem()
+    method, n_steps, dt = "dopri5", (6 if smoke else 10), 0.1
+    kw = dict(dt=dt, n_steps=n_steps, method=method)
+
+    # measured peaks of the named Table-2 points define the budget ladder
+    anchors = {}
+    for pol, nck in [("naive", None), ("pnode", None), ("pnode2", None),
+                     ("revolve", max(1, n_steps // 4))]:
+        anchors[f"{pol}" + (f"_nc{nck}" if nck else "")] = dict(
+            policy=pol, ncheck=nck,
+            **measure_reverse_cost(f, u0, th, policy=pol, ncheck=nck, **kw))
+
+    print("== mem_plan: planner predicted vs measured (bytes) ==")
+    print(fmt_row("budget", "chosen", "ncheck", "pred peak", "meas hlo",
+                  "meas temp", "NFE-B", "fits", widths=[12, 10, 6, 12, 12,
+                                                        12, 8, 5]))
+    rows = []
+    budgets = sorted({int(a["hlo_peak_bytes"]) for a in anchors.values()}
+                     | {2 * int(anchors["naive"]["hlo_peak_bytes"])})
+    for budget in budgets:
+        plan = plan_odeint(f, u0, th, mem_budget=budget, **kw)
+        meas = measure_reverse_cost(f, u0, th, policy=plan.policy,
+                                    ncheck=plan.ncheck,
+                                    offload=plan.offload, **kw)
+        fits = meas["hlo_peak_bytes"] <= budget
+        rows.append({
+            "budget": budget, "policy": plan.policy, "ncheck": plan.ncheck,
+            "offload": plan.offload,
+            "predicted_peak_bytes": plan.predicted.peak_bytes,
+            "predicted_extra_fevals": plan.predicted.extra_fevals,
+            "measured_hlo_peak_bytes": meas["hlo_peak_bytes"],
+            "measured_temp_bytes": meas["temp_bytes"],
+            "fits": bool(fits),
+        })
+        print(fmt_row(budget, plan.policy, plan.ncheck,
+                      plan.predicted.peak_bytes,
+                      f"{meas['hlo_peak_bytes']:.0f}",
+                      f"{meas['temp_bytes']:.0f}",
+                      plan.predicted.extra_fevals, fits,
+                      widths=[12, 10, 6, 12, 12, 12, 8, 5]))
+
+    # offload: spilling pnode's checkpoints off device
+    dev = measure_reverse_cost(f, u0, th, policy="pnode", **kw)
+    spill = measure_reverse_cost(f, u0, th, policy="pnode", offload="spill",
+                                 **kw)
+    print(f"pnode offload: temp {dev['temp_bytes']:.0f} -> "
+          f"{spill['temp_bytes']:.0f} B "
+          f"(hlo peak {dev['hlo_peak_bytes']:.0f} -> "
+          f"{spill['hlo_peak_bytes']:.0f})")
+
+    record = {
+        "bench": "mem_plan", "smoke": smoke, "method": method,
+        "n_steps": n_steps, "state_bytes": tree_bytes(u0),
+        "anchors": anchors, "plans": rows,
+        "offload_pnode": {"device": dev, "spill": spill},
+    }
+    Path(out_path).write_text(json.dumps(record, indent=2))
+    print(f"[mem_plan] wrote {out_path}")
+    return record
+
+
+if __name__ == "__main__":
+    main()

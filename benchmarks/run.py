@@ -2,6 +2,8 @@
 
   PYTHONPATH=src python -m benchmarks.run            # quick versions
   PYTHONPATH=src python -m benchmarks.run --full     # full sweeps
+  PYTHONPATH=src python -m benchmarks.run --smoke    # CI: mem_plan only,
+                                                    # writes BENCH_2.json
 """
 from __future__ import annotations
 
@@ -12,8 +14,15 @@ import time
 def main() -> None:
     full = "--full" in sys.argv
 
+    if "--smoke" in sys.argv:
+        from benchmarks import mem_plan
+        t0 = time.time()
+        mem_plan.main(smoke=True)
+        print(f"\n== bench smoke done in {time.time()-t0:.1f}s ==")
+        return
+
     from benchmarks import (adjoint_discrepancy, cnf_tables, fig3_memory,
-                            roofline, stiff_table8, table2_costs)
+                            mem_plan, roofline, stiff_table8, table2_costs)
 
     sections = [
         ("adjoint_discrepancy (Table 1 / Prop 1)",
@@ -23,6 +32,7 @@ def main() -> None:
          lambda: cnf_tables.main(quick=not full)),
         ("stiff_table8 (Table 8 / Fig 5)", stiff_table8.main),
         ("fig3_memory (Fig 3)", fig3_memory.main),
+        ("mem_plan (planner / BENCH_2.json)", mem_plan.main),
         ("roofline (EXPERIMENTS Roofline)", roofline.main),
     ]
 

@@ -10,6 +10,15 @@ adjoint with each step's own h.
 
 Returns (u_final, info) where info carries NFE counters (accepted/rejected) —
 these feed the Table-8 benchmark.
+
+mem — the ring buffer allocates max_steps*(N_s+1) state vectors up front
+(Table-2 pnode storage at the worst-case step count).  ``offload="spill"``
+writes accepted steps through a ``repro.mem.offload`` spill store instead:
+the device carries one token scalar, the host dict holds the checkpoints,
+and the reverse scan streams them back — device-live memory is O(1) states
+for any max_steps, with identical gradients (rejected steps never reach the
+store, mirroring the paper's observation that they cost the adjoint
+nothing).
 """
 from __future__ import annotations
 
@@ -54,38 +63,57 @@ def _error_norm(u, u_new, err, rtol, atol):
 def odeint_adaptive(f: VectorField, u0: PyTree, theta: PyTree, *,
                     t0: float, t1: float, rtol: float = 1e-6,
                     atol: float = 1e-6, max_steps: int = 512,
-                    h0: float | None = None, method: str = "dopri5"):
+                    h0: float | None = None, method: str = "dopri5",
+                    offload: str | None = None):
     """Adaptive solve from t0 to t1; differentiable (discrete adjoint over
-    accepted steps).  Returns (u_final, AdaptiveInfo)."""
+    accepted steps).  Returns (u_final, AdaptiveInfo).  ``offload="spill"``
+    replaces the preallocated ring buffer with a host-side checkpoint store
+    (see module docstring)."""
     if method != "dopri5":
         raise ValueError("adaptive integration currently supports dopri5")
+    if offload not in (None, "device", "spill"):
+        raise ValueError(
+            f"unknown offload tier {offload!r} for the adaptive ring "
+            "buffer; one of (None, 'device', 'spill')")
+    store = None
+    if offload == "spill":
+        from repro.mem.offload import make_store
+        store = make_store("spill")
     h_init = float(h0) if h0 is not None else (float(t1) - float(t0)) / 100.0
     u_final, info = _odeint_adaptive(f, float(t0), float(t1), float(rtol),
                                      float(atol), int(max_steps),
-                                     float(h_init), u0, theta)
+                                     float(h_init), store, u0, theta)
     return u_final, info
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3, 4, 5, 6))
-def _odeint_adaptive(f, t0, t1, rtol, atol, max_steps, h0, u0, theta):
-    out, _res = _adaptive_fwd_solve(f, t0, t1, rtol, atol, max_steps, h0, u0,
-                                    theta)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3, 4, 5, 6, 7))
+def _odeint_adaptive(f, t0, t1, rtol, atol, max_steps, h0, store, u0, theta):
+    out, _res = _adaptive_fwd_solve(f, t0, t1, rtol, atol, max_steps, h0,
+                                    store, u0, theta)
     return out
 
 
-def _adaptive_fwd_solve(f, t0, t1, rtol, atol, max_steps, h0, u0, theta):
+def _adaptive_fwd_solve(f, t0, t1, rtol, atol, max_steps, h0, store, u0,
+                        theta):
     tab = DOPRI5
     s = tab.num_stages
     order = tab.order
+    spill = store is not None
 
     def buf_like(x):
         return jnp.zeros((max_steps,) + x.shape, x.dtype)
 
-    state_buf = jtu.tree_map(buf_like, u0)
     stage0 = tree_stack([u0] * s)  # shape template for stages
-    stage_buf = jtu.tree_map(buf_like, jtu.tree_map(jnp.zeros_like, stage0))
-    h_buf = jnp.zeros((max_steps,), jnp.result_type(float))
-    t_buf = jnp.zeros((max_steps,), jnp.result_type(float))
+    if spill:
+        # ring buffer replaced by the store: the carry holds one token
+        bufs0 = store.init_token()
+    else:
+        state_buf = jtu.tree_map(buf_like, u0)
+        stage_buf = jtu.tree_map(buf_like,
+                                 jtu.tree_map(jnp.zeros_like, stage0))
+        h_buf = jnp.zeros((max_steps,), jnp.result_type(float))
+        t_buf = jnp.zeros((max_steps,), jnp.result_type(float))
+        bufs0 = (state_buf, stage_buf, h_buf, t_buf)
 
     def cond(carry):
         u, t, h, n_acc, n_rej, bufs, err_prev = carry
@@ -113,27 +141,32 @@ def _adaptive_fwd_solve(f, t0, t1, rtol, atol, max_steps, h0, u0, theta):
         factor = jnp.clip(factor, 0.2, 5.0)
         h_next = h * jnp.where(accept, factor, jnp.minimum(factor, 1.0))
 
-        sb, kb, hb, tb = bufs
         idx = n_acc
-        sb2 = jtu.tree_map(lambda b, x: b.at[idx].set(
-            jnp.where(accept, x, b[idx])), sb, u)
-        kb2 = jtu.tree_map(lambda b, x: b.at[idx].set(
-            jnp.where(accept, x, b[idx])), kb, tree_stack(ks))
-        hb2 = hb.at[idx].set(jnp.where(accept, h, hb[idx]))
-        tb2 = tb.at[idx].set(jnp.where(accept, t, tb[idx]))
+        if spill:
+            bufs2 = store.write_at(bufs, idx, (u, tree_stack(ks), h, t),
+                                   keep=accept)
+        else:
+            sb, kb, hb, tb = bufs
+            sb2 = jtu.tree_map(lambda b, x: b.at[idx].set(
+                jnp.where(accept, x, b[idx])), sb, u)
+            kb2 = jtu.tree_map(lambda b, x: b.at[idx].set(
+                jnp.where(accept, x, b[idx])), kb, tree_stack(ks))
+            hb2 = hb.at[idx].set(jnp.where(accept, h, hb[idx]))
+            tb2 = tb.at[idx].set(jnp.where(accept, t, tb[idx]))
+            bufs2 = (sb2, kb2, hb2, tb2)
 
         u_out = jtu.tree_map(lambda a, b: jnp.where(accept, b, a), u, u_new)
         t_out = jnp.where(accept, t + h, t)
         return (u_out, t_out, h_next,
                 n_acc + accept.astype(jnp.int32),
                 n_rej + (1 - accept.astype(jnp.int32)),
-                (sb2, kb2, hb2, tb2),
+                bufs2,
                 jnp.where(accept, enorm, err_prev))
 
     carry0 = (u0, jnp.asarray(t0, jnp.result_type(float)),
               jnp.asarray(h0, jnp.result_type(float)),
               jnp.array(0, jnp.int32), jnp.array(0, jnp.int32),
-              (state_buf, stage_buf, h_buf, t_buf),
+              bufs0,
               jnp.asarray(1.0, jnp.result_type(float)))
     u_f, t_f, h_f, n_acc, n_rej, bufs, _ = jax.lax.while_loop(cond, body, carry0)
     nfe = (n_acc + n_rej) * s
@@ -141,25 +174,31 @@ def _adaptive_fwd_solve(f, t0, t1, rtol, atol, max_steps, h0, u0, theta):
     return (u_f, info), (bufs, n_acc, theta)
 
 
-def _odeint_adaptive_fwd(f, t0, t1, rtol, atol, max_steps, h0, u0, theta):
-    out, res = _adaptive_fwd_solve(f, t0, t1, rtol, atol, max_steps, h0, u0,
-                                   theta)
+def _odeint_adaptive_fwd(f, t0, t1, rtol, atol, max_steps, h0, store, u0,
+                         theta):
+    out, res = _adaptive_fwd_solve(f, t0, t1, rtol, atol, max_steps, h0,
+                                   store, u0, theta)
     return out, res
 
 
-def _odeint_adaptive_bwd(f, t0, t1, rtol, atol, max_steps, h0, res, g):
+def _odeint_adaptive_bwd(f, t0, t1, rtol, atol, max_steps, h0, store, res, g):
     tab = DOPRI5
     bufs, n_acc, theta = res
-    sb, kb, hb, tb = bufs
     g_u, _g_info = g  # ignore cotangents of the counters
+    spill = store is not None
+    if not spill:
+        sb, kb, hb, tb = bufs
 
     def body(carry, idx):
         lam, mu = carry
         valid = idx < n_acc
-        u_n = jtu.tree_map(lambda b: b[idx], sb)
-        k_n = jtu.tree_map(lambda b: b[idx], kb)
-        h_n = hb[idx]
-        t_n = tb[idx]
+        if spill:
+            u_n, k_n, h_n, t_n = store.read_at(bufs, idx, valid=valid)
+        else:
+            u_n = jtu.tree_map(lambda b: b[idx], sb)
+            k_n = jtu.tree_map(lambda b: b[idx], kb)
+            h_n = hb[idx]
+            t_n = tb[idx]
         lam2, th_bar = rk_adjoint_step(f, tab, u_n, k_n, theta, t_n, h_n, lam)
         lam_out = jtu.tree_map(lambda a, b: jnp.where(valid, b, a), lam, lam2)
         mu_out = jtu.tree_map(

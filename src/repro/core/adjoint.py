@@ -22,6 +22,26 @@ baseline of the paper's Table 2 is implemented:
               (`ncheck` slots), trading recomputation for memory.
 
 Gradients are returned w.r.t. ``u0`` and ``theta``.  ``t0``/``dt`` are static.
+
+mem — Table-2 cost model and budget planning
+--------------------------------------------
+Each policy is one point on the paper's memory/recompute curve; the mapping
+to Table 2 (checkpoint storage in state-vectors, NFE-B in f evaluations) is
+implemented analytically by ``checkpoint_floats`` / ``nfe_backward`` below
+and, in byte units with working-set terms, by ``repro.mem.model``.  Two
+knobs select the point automatically instead of by hand:
+
+  ``adjoint="auto", mem_budget=B``  the ``repro.mem.planner`` solves for
+      the cheapest reverse-accurate policy (and the minimal-recompute
+      ``ncheck`` via Prop. 2) whose reverse pass fits in B bytes, verifying
+      the choice against the lowered HLO by default (``mem_verify``).
+  ``offload="host" | "spill"``      checkpoints are written through a
+      ``repro.mem.offload`` store instead of riding the custom_vjp
+      residuals: "host" moves revolve's trace-time checkpoints to
+      pinned-host memory, "spill" streams scanned pnode / revolve
+      checkpoints into a host-side callback store so device-live memory is
+      O(ncheck) (revolve) or O(1) state copies (pnode) regardless of N_t.
+      Gradients are bitwise-identical to the in-device policies.
 """
 from __future__ import annotations
 
@@ -61,25 +81,90 @@ def _t_of(t0: float, dt: float, n) -> Any:
 # public API
 # ---------------------------------------------------------------------------
 
+_OFFLOAD_TIERS = (None, "device", "host", "spill")
+
+
+def _validate_ncheck(adjoint: str, ncheck, n_steps: int) -> int:
+    if ncheck is None:
+        raise ValueError(
+            f"adjoint={adjoint!r} requires ncheck (the number of checkpoint "
+            "slots); pass it explicitly, or use adjoint='auto' with "
+            "mem_budget=<bytes> and the planner will pick the minimal-"
+            "recompute ncheck for the budget (Prop. 2)")
+    ncheck = int(ncheck)
+    if ncheck <= 0:
+        raise ValueError(
+            f"ncheck must be a positive number of checkpoint slots, got "
+            f"{ncheck} (the reverse sweep needs at least one free slot to "
+            "re-advance a segment)")
+    if ncheck >= n_steps:
+        raise ValueError(
+            f"ncheck={ncheck} must be < n_steps={n_steps}: with a slot for "
+            "every step there is nothing to recompute — that point of the "
+            "memory/compute curve is adjoint='pnode' (or let "
+            "adjoint='auto' choose)")
+    return ncheck
+
+
 def odeint(f: VectorField, u0: PyTree, theta: PyTree, *, dt: float,
            n_steps: int, t0: float = 0.0, method: str = "rk4",
-           adjoint: str = "pnode", ncheck: int | None = None) -> PyTree:
-    """Fixed-step ODE solve, differentiable with the selected adjoint policy."""
+           adjoint: str = "pnode", ncheck: int | None = None,
+           offload: str | None = None, mem_budget: int | None = None,
+           mem_verify: str = "measure") -> PyTree:
+    """Fixed-step ODE solve, differentiable with the selected adjoint policy.
+
+    ``adjoint="auto"`` with ``mem_budget=<bytes>`` delegates the policy (and
+    ``ncheck``/``offload``) choice to ``repro.mem.planner``; ``mem_verify``
+    selects how the planner checks the budget ("measure": against the
+    lowered HLO's peak live bytes, compiled once and cached; "model": the
+    analytic Table-2 model only, no compilation).  ``offload`` routes the
+    policy's checkpoints through a ``repro.mem.offload`` store tier.
+    """
+    n_steps = int(n_steps)
+    if n_steps < 1:
+        raise ValueError(f"n_steps must be >= 1, got {n_steps}")
+    if adjoint == "auto":
+        from repro.mem.planner import plan_odeint  # deferred: import cycle
+        plan = plan_odeint(f, u0, theta, dt=float(dt), n_steps=n_steps,
+                           t0=float(t0), method=method,
+                           mem_budget=mem_budget, verify=mem_verify)
+        adjoint, ncheck = plan.policy, plan.ncheck
+        offload = plan.offload if plan.offload is not None else offload
+    elif mem_budget is not None:
+        raise ValueError(
+            "mem_budget is only meaningful with adjoint='auto' (the planner "
+            f"chooses the policy); got adjoint={adjoint!r}")
     if adjoint not in POLICIES:
-        raise ValueError(f"unknown adjoint policy {adjoint!r}; one of {POLICIES}")
+        raise ValueError(f"unknown adjoint policy {adjoint!r}; one of "
+                         f"{POLICIES} (or 'auto' with mem_budget)")
+    if offload not in _OFFLOAD_TIERS:
+        raise ValueError(f"unknown offload tier {offload!r}; one of "
+                         f"{_OFFLOAD_TIERS}")
+    offloaded = offload in ("host", "spill")
+    if offloaded and adjoint not in ("pnode", "revolve", "revolve2"):
+        raise ValueError(
+            f"offload={offload!r} is not supported for adjoint={adjoint!r}: "
+            "only policies with explicit per-step checkpoints (pnode, "
+            "revolve, revolve2) write through the store")
     if adjoint == "naive":
         u_final, _ = solve_fixed(f, method, u0, theta, t0, dt, n_steps)
         return u_final
-    if adjoint == "revolve":
-        if ncheck is None:
-            raise ValueError("adjoint='revolve' requires ncheck")
-        return _odeint_revolve(f, method, float(t0), float(dt), int(n_steps),
-                               int(ncheck), u0, theta)
-    if adjoint == "revolve2":
-        if ncheck is None:
-            raise ValueError("adjoint='revolve2' requires ncheck")
-        return _odeint_revolve2(f, method, float(t0), float(dt), int(n_steps),
-                                int(ncheck), u0, theta)
+    if adjoint in ("revolve", "revolve2"):
+        ncheck = _validate_ncheck(adjoint, ncheck, n_steps)
+        from repro.mem.offload import make_store  # deferred: import cycle
+        store = make_store(offload)
+        impl = _odeint_revolve if adjoint == "revolve" else _odeint_revolve2
+        return impl(f, method, float(t0), float(dt), n_steps, ncheck,
+                    store, u0, theta)
+    if adjoint == "pnode" and offloaded:
+        if offload == "host":
+            raise ValueError(
+                "offload='host' applies to trace-time checkpoint sites "
+                "(revolve/revolve2); the scanned pnode sweep offloads "
+                "through offload='spill'")
+        from repro.mem.offload import make_store
+        return _odeint_pnode_spill(f, method, float(t0), float(dt), n_steps,
+                                   make_store("spill"), u0, theta)
     return _odeint_cv(f, method, float(t0), float(dt), int(n_steps),
                       adjoint, u0, theta)
 
@@ -285,8 +370,8 @@ _odeint_cv.defvjp(_odeint_cv_fwd, _odeint_cv_bwd)
 # revolve policy (binomial checkpointing, trace-time schedule)
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3, 4, 5))
-def _odeint_revolve(f, method, t0, dt, n_steps, ncheck, u0, theta):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3, 4, 5, 6))
+def _odeint_revolve(f, method, t0, dt, n_steps, ncheck, store, u0, theta):
     u_final, _ = solve_fixed(f, method, u0, theta, t0, dt, n_steps)
     return u_final
 
@@ -305,26 +390,25 @@ def _advance_segment(f, tab, u, theta, t_start_idx, n, t0, dt):
     return u_out
 
 
-def _odeint_revolve_fwd(f, method, t0, dt, n_steps, ncheck, u0, theta):
+def _odeint_revolve_fwd(f, method, t0, dt, n_steps, ncheck, store, u0, theta):
     tab = get_tableau(method)
     positions = [0] + revolve_mod.sweep_checkpoint_positions(n_steps, ncheck)
-    ckpt_vals = []
     u = u0
     bounds = positions + [n_steps]
     for a, b in zip(bounds[:-1], bounds[1:]):
         # execute step a explicitly to capture its stages for the checkpoint
         t_a = _t_of(t0, dt, a)
         u_next, stages_a = rk_step(f, tab, u, theta, t_a, dt)
-        ckpt_vals.append((u, stages_a))
+        store.put(a, (u, stages_a))
         u = _advance_segment(f, tab, u_next, theta, a + 1, b - a - 1, t0, dt)
-    return u, (tuple(ckpt_vals), theta)
+    return u, (store.pack(), theta)
 
 
-def _odeint_revolve_bwd(f, method, t0, dt, n_steps, ncheck, res, g):
+def _odeint_revolve_bwd(f, method, t0, dt, n_steps, ncheck, store, res, g):
     tab = get_tableau(method)
-    ckpt_vals, theta = res
+    ckpt_res, theta = res
     positions = [0] + revolve_mod.sweep_checkpoint_positions(n_steps, ncheck)
-    ckpt = {p: v for p, v in zip(positions, ckpt_vals)}
+    store.unpack(ckpt_res, positions)
 
     lam = g
     mu = tree_zeros_like(theta)
@@ -332,16 +416,17 @@ def _odeint_revolve_bwd(f, method, t0, dt, n_steps, ncheck, res, g):
         kind = act[0]
         if kind == "advance":
             _, start, m = act
-            u_s, st_s = ckpt[start]
+            u_s, st_s = store.get(start)
             # stage-combine restart: u_{start+1} with zero f evaluations
             u = rk_combine(tab, u_s, tree_unstack(st_s, tab.num_stages), dt)
             u = _advance_segment(f, tab, u, theta, start + 1, m - 1, t0, dt)
             t_tgt = _t_of(t0, dt, start + m)
             _, stages_tgt = rk_step(f, tab, u, theta, t_tgt, dt)
-            ckpt[start + m] = (u, stages_tgt)
+            store.put(start + m, (u, stages_tgt))
         elif kind == "adjoint":
             _, idx = act
-            u_i, st_i = ckpt.pop(idx)
+            u_i, st_i = store.get(idx)
+            store.free(idx)
             t_i = _t_of(t0, dt, idx)
             lam, th_bar = rk_adjoint_step(f, tab, u_i, st_i, theta, t_i, dt, lam)
             mu = tree_add(mu, th_bar)
@@ -351,7 +436,7 @@ def _odeint_revolve_bwd(f, method, t0, dt, n_steps, ncheck, res, g):
             # O(|theta|)).  Serialize the chain explicitly.
             lam, mu = jax.lax.optimization_barrier((lam, mu))
         elif kind == "free":
-            ckpt.pop(act[1], None)
+            store.free(act[1])
         else:  # pragma: no cover
             raise ValueError(act)
     return lam, mu
@@ -378,8 +463,8 @@ _odeint_revolve.defvjp(_odeint_revolve_fwd, _odeint_revolve_bwd)
 # step per segment).  This is the production default for LM-scale training.
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3, 4, 5))
-def _odeint_revolve2(f, method, t0, dt, n_steps, ncheck, u0, theta):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3, 4, 5, 6))
+def _odeint_revolve2(f, method, t0, dt, n_steps, ncheck, store, u0, theta):
     u_final, _ = solve_fixed(f, method, u0, theta, t0, dt, n_steps)
     return u_final
 
@@ -389,26 +474,29 @@ def _segment_bounds(n_steps: int, ncheck: int):
     return list(zip(positions, positions[1:] + [n_steps]))
 
 
-def _odeint_revolve2_fwd(f, method, t0, dt, n_steps, ncheck, u0, theta):
+def _odeint_revolve2_fwd(f, method, t0, dt, n_steps, ncheck, store, u0,
+                         theta):
     bounds = _segment_bounds(n_steps, ncheck)
-    boundary_states = []
     u = u0
     for a, b in bounds:
-        boundary_states.append(u)
+        store.put(a, u)
         u = _advance_segment(f, get_tableau(method), u, theta, a, b - a,
                              t0, dt)
-    return u, (tuple(boundary_states), theta)
+    return u, (store.pack(), theta)
 
 
-def _odeint_revolve2_bwd(f, method, t0, dt, n_steps, ncheck, res, g):
+def _odeint_revolve2_bwd(f, method, t0, dt, n_steps, ncheck, store, res, g):
     tab = get_tableau(method)
-    boundary_states, theta = res
+    ckpt_res, theta = res
     bounds = _segment_bounds(n_steps, ncheck)
+    store.unpack(ckpt_res, [a for a, _ in bounds])
 
     lam = g
     mu = tree_zeros_like(theta)
-    for (a, b), u_a in zip(reversed(bounds), reversed(boundary_states)):
+    for a, b in reversed(bounds):
         m = b - a
+        u_a = store.get(a)
+        store.free(a)
         # re-advance the segment, saving states and stages (scan)
         _, saved = solve_fixed(f, method, u_a, theta, t0 + dt * a, dt, m,
                                save_states=True, save_stages=True)
@@ -431,13 +519,63 @@ _odeint_revolve2.defvjp(_odeint_revolve2_fwd, _odeint_revolve2_bwd)
 
 
 # ---------------------------------------------------------------------------
+# pnode with spill offload: the scanned forward sweep streams every step's
+# (state, stages) checkpoint into the host-side store instead of stacking
+# them in device residual buffers; the reverse scan streams them back.  The
+# residual is a single token scalar, so compiled device-live memory is O(1)
+# state copies regardless of N_t while the adjoint math — and therefore the
+# gradients, bitwise — is exactly pnode's (tests/test_mem.py).
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3, 4, 5))
+def _odeint_pnode_spill(f, method, t0, dt, n_steps, store, u0, theta):
+    u_final, _ = solve_fixed(f, method, u0, theta, t0, dt, n_steps)
+    return u_final
+
+
+def _odeint_pnode_spill_fwd(f, method, t0, dt, n_steps, store, u0, theta):
+    tab = get_tableau(method)
+
+    def body(carry, n):
+        u, tok = carry
+        t = t0 + n.astype(jnp.result_type(float)) * dt  # match solve_fixed
+        u_next, stages = rk_step(f, tab, u, theta, t, dt)
+        tok = store.write_at(tok, n, (u, stages))
+        return (u_next, tok), None
+
+    (u_final, tok), _ = jax.lax.scan(body, (u0, store.init_token()),
+                                     jnp.arange(n_steps))
+    return u_final, (tok, theta)
+
+
+def _odeint_pnode_spill_bwd(f, method, t0, dt, n_steps, store, res, g):
+    tab = get_tableau(method)
+    tok, theta = res
+
+    def body(carry, n):
+        lam, mu = carry
+        u_n, k_n = store.read_at(tok, n)
+        t_n = _t_of(t0, dt, n)
+        lam, th_bar = rk_adjoint_step(f, tab, u_n, k_n, theta, t_n, dt, lam)
+        return (lam, tree_add(mu, th_bar)), None
+
+    (lam, mu), _ = jax.lax.scan(
+        body, (g, tree_zeros_like(theta)), jnp.arange(n_steps), reverse=True)
+    return lam, mu
+
+
+_odeint_pnode_spill.defvjp(_odeint_pnode_spill_fwd, _odeint_pnode_spill_bwd)
+
+
+# ---------------------------------------------------------------------------
 # trajectory-loss support (the paper's eq. 2 integral term)
 # ---------------------------------------------------------------------------
 
 def odeint_with_quadrature(f: VectorField, q, u0: PyTree, theta: PyTree, *,
                            dt: float, n_steps: int, t0: float = 0.0,
                            method: str = "rk4", adjoint: str = "pnode",
-                           ncheck: int | None = None):
+                           ncheck: int | None = None,
+                           offload: str | None = None):
     """Integrate du/dt = f AND the loss quadrature dQ/dt = q(u, theta, t)
     jointly (eq. 2's integral term: running costs / Tikhonov / kinetic
     regularizers a la Finlay et al.).  Returns (u_final, Q).
@@ -451,5 +589,6 @@ def odeint_with_quadrature(f: VectorField, q, u0: PyTree, theta: PyTree, *,
 
     q0 = jnp.zeros((), jnp.result_type(float))
     u_final, Q = odeint(aug, (u0, q0), theta, dt=dt, n_steps=n_steps, t0=t0,
-                        method=method, adjoint=adjoint, ncheck=ncheck)
+                        method=method, adjoint=adjoint, ncheck=ncheck,
+                        offload=offload)
     return u_final, Q

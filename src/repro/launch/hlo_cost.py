@@ -408,3 +408,82 @@ def analyze(hlo_text: str) -> Cost:
         raise ValueError("no ENTRY computation found in HLO text")
     memo: Dict[str, Cost] = {}
     return computation_cost(entry, comps, memo)
+
+
+# ---------------------------------------------------------------------------
+# peak live bytes (liveness sweep)
+#
+# The planner (repro.mem) needs "does this reverse pass fit in B bytes" from
+# the lowered HLO alone.  memory_analysis() gives XLA's buffer-assignment
+# answer but only per whole module; this sweep computes an *analytic* peak
+# from the optimized HLO text so the same number exists on any backend and
+# can be decomposed in tests.  Model: program order is execution order
+# (post-scheduling HLO), a value is live from its defining op to its last
+# use, parameters are live throughout, and control-flow ops add the peak of
+# their called computation on top of the caller's live set at that point.
+# Aliasing (while-loop state donation, tuple views) is ignored, so this is
+# a modest over-estimate — consistent, monotone in problem size, and tight
+# enough to rank adjoint policies (validated against memory_analysis in
+# tests/test_hlo_cost.py).
+# ---------------------------------------------------------------------------
+
+# ops whose result aliases/views an operand: no new buffer
+_ALIASING = {"parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+             "after-all", "add-dependency", "copy-done", "all-gather-done",
+             "all-reduce-done", "collective-permute-done",
+             "optimization-barrier"}
+
+
+def _called_comps(op: Op) -> List[str]:
+    names: List[str] = []
+    for regex in (_BODY_RE, _COND_RE, _CALLS_RE, _TO_APPLY_RE):
+        m = regex.search(op.line)
+        if m:
+            names.append(m.group(1))
+    m = _BRANCHES_RE.search(op.line)
+    if m:
+        names.extend(b.strip() for b in m.group(1).split(",") if b.strip())
+    return names
+
+
+def _comp_peak(comp_name: str, comps: Dict[str, Computation],
+               memo: Dict[str, float]) -> float:
+    if comp_name in memo:
+        return memo[comp_name]
+    memo[comp_name] = 0.0  # break cycles defensively
+    comp = comps.get(comp_name)
+    if comp is None:
+        return 0.0
+    size = {name: float(shape_numel_bytes(t)[1])
+            for name, t in comp.symbols.items()}
+    last_use: Dict[str, int] = {}
+    for i, op in enumerate(comp.ops):
+        for o in op.operands:
+            last_use[o] = i
+    base = sum(size.get(p, 0.0) for p in comp.params)
+    alive: Dict[str, float] = {}
+    peak = base
+    for i, op in enumerate(comp.ops):
+        nested = 0.0
+        called = _called_comps(op)
+        if op.kind == "fusion":
+            called = []  # fusion internals live in registers/VMEM
+        for c in called:
+            nested = max(nested, _comp_peak(c, comps, memo))
+        res = 0.0 if op.kind in _ALIASING else size.get(op.name, 0.0)
+        peak = max(peak, base + sum(alive.values()) + res + nested)
+        if res:
+            alive[op.name] = res
+        for o in set(op.operands):
+            if last_use.get(o) == i:
+                alive.pop(o, None)
+    memo[comp_name] = peak
+    return peak
+
+
+def peak_live_bytes(hlo_text: str) -> float:
+    """Analytic peak live-buffer bytes of the module's entry computation."""
+    comps, entry = parse_hlo(hlo_text)
+    if entry is None:
+        raise ValueError("no ENTRY computation found in HLO text")
+    return _comp_peak(entry, comps, {})

@@ -12,13 +12,35 @@ from jax import tree_util as jtu
 
 from repro.configs.base import ModelConfig, ShapeCell
 from repro.models import lm
+from repro.optim import compress as compress_mod
 from repro.optim.adamw import AdamW
 
 
-def make_train_step(cfg: ModelConfig, opt: AdamW, accum: int = 1):
+def make_train_step(cfg: ModelConfig, opt: AdamW, accum: int = 1,
+                    compress: str | None = None):
     """Returns train_step(params, opt_state, batch, step) -> (params,
     opt_state, metrics).  accum > 1 scans over microbatches (gradient
-    accumulation): live activation memory scales with B/accum."""
+    accumulation): live activation memory scales with B/accum.
+
+    ``compress`` applies optim/compress.py wire compression to the grads
+    before the optimizer sees them (flag-gated, default off):
+      "bf16"  stateless bf16 round-trip — the quantization the cross-pod
+              all-reduce wire sees (the dry-run's shard_map path carries
+              the same dtype on the wire; under plain GSPMD the implicit
+              all-reduce stays fp32 and this reproduces the numerics);
+      "int8"  per-leaf symmetric int8 with error feedback — the step gains
+              a residual state: signature becomes (params, opt_state,
+              comp_state, batch, step) -> (..., comp_state, metrics).
+    """
+    if compress not in (None, "none", "bf16", "int8"):
+        raise ValueError(f"unknown compression scheme {compress!r}; "
+                         "one of (None, 'none', 'bf16', 'int8')")
+    if compress == "none":
+        compress = None
+    if compress == "int8" and accum != 1:
+        raise NotImplementedError(
+            "int8 gradient compression with accum > 1 is not wired "
+            "(quantize-per-microbatch would break error feedback)")
 
     def loss_of(params, batch):
         return lm.loss_fn(cfg, params, batch)
@@ -48,11 +70,33 @@ def make_train_step(cfg: ModelConfig, opt: AdamW, accum: int = 1):
             grads = jtu.tree_map(lambda g: g / accum, grads)
             loss = loss_sum / accum
             metrics = {}
+        if compress == "bf16":
+            grads = compress_mod.bf16_decompress(
+                compress_mod.bf16_compress(grads))
         params, opt_state, opt_metrics = opt.update(grads, opt_state, params)
         metrics = dict(metrics, loss=loss, **opt_metrics)
         return params, opt_state, metrics
 
-    return train_step
+    if compress != "int8":
+        return train_step
+
+    def train_step_int8(params, opt_state, comp_state, batch, step):
+        (loss, metrics), grads = grad_fn(params, batch)
+        q, comp_state = compress_mod.int8_compress(grads, comp_state)
+        grads = compress_mod.int8_decompress(q)
+        params, opt_state, opt_metrics = opt.update(grads, opt_state, params)
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return params, opt_state, comp_state, metrics
+
+    return train_step_int8
+
+
+def init_compress_state(compress: str | None, params):
+    """Error-feedback residual state for the chosen scheme (None if
+    stateless)."""
+    if compress == "int8":
+        return compress_mod.int8_init(params)
+    return None
 
 
 def make_prefill_step(cfg: ModelConfig, max_seq: int):

@@ -28,7 +28,7 @@ from repro.data.pipeline import SyntheticLM
 from repro.dist import sharding as shd
 from repro.ft import StragglerDetector, TrainSupervisor
 from repro.launch.mesh import make_host_mesh, make_production_mesh
-from repro.launch.steps import make_train_step
+from repro.launch.steps import init_compress_state, make_train_step
 from repro.models import lm
 from repro.optim.adamw import AdamW
 
@@ -37,8 +37,11 @@ def train(cfg: ModelConfig, cell: ShapeCell, *, steps: int, mesh=None,
           ckpt_dir: str | None = None, ckpt_every: int = 50,
           accum: int = 1, lr: float = 3e-4, log_every: int = 10,
           seed: int = 0, grad_dtype: str | None = None,
-          log_fn=print) -> dict:
-    """Returns {"losses": [...], "resumed_from": step|None, ...}."""
+          compress: str | None = None, log_fn=print) -> dict:
+    """Returns {"losses": [...], "resumed_from": step|None, ...}.
+
+    ``compress`` wires optim/compress.py gradient compression into the
+    production step (flag-gated, default off; see launch/steps.py)."""
     mesh = mesh or make_host_mesh()
     opt = AdamW(lr=lr, total_steps=max(steps, 2), warmup_steps=min(100, steps // 10 + 1),
                 grad_dtype=grad_dtype)
@@ -59,19 +62,48 @@ def train(cfg: ModelConfig, cell: ShapeCell, *, steps: int, mesh=None,
         opt_state = jax.jit(opt.init, out_shardings=oshard)(params)
         start_step = 0
 
+        int8 = compress == "int8"
+        comp_state = None
+        if int8:
+            comp_state = jax.jit(
+                lambda p: init_compress_state(compress, p),
+                out_shardings=pshard)(params)
+
+        def ckpt_tree():
+            # the int8 error-feedback residual is training state: dropping
+            # it on resume would silently fork the loss trajectory
+            tree = {"params": params, "opt_state": opt_state}
+            if int8:
+                tree["comp_state"] = comp_state
+            return tree
+
         mgr = None
         if ckpt_dir:
             mgr = CheckpointManager(ckpt_dir, keep_n=3)
             latest = mgr.latest_step()
             if latest is not None:
-                (params, opt_state), start_step = _restore(
-                    mgr, params, opt_state, pshard, oshard)
+                shardings = {"params": pshard, "opt_state": oshard}
+                if int8:
+                    shardings["comp_state"] = pshard
+                restored, start_step = mgr.restore_latest(ckpt_tree(),
+                                                          shardings)
+                params, opt_state = restored["params"], restored["opt_state"]
+                if int8:
+                    comp_state = restored["comp_state"]
                 log_fn(f"[train] resumed from step {start_step}")
 
-        step_fn = jax.jit(make_train_step(cfg, opt, accum=accum),
-                          in_shardings=(pshard, oshard, None, None),
-                          out_shardings=(pshard, oshard, None),
-                          donate_argnums=(0, 1))
+        if int8:
+            step_fn = jax.jit(
+                make_train_step(cfg, opt, accum=accum, compress=compress),
+                in_shardings=(pshard, oshard, pshard, None, None),
+                out_shardings=(pshard, oshard, pshard, None),
+                donate_argnums=(0, 1, 2))
+        else:
+            step_fn = jax.jit(
+                make_train_step(cfg, opt, accum=accum, compress=compress),
+                in_shardings=(pshard, oshard, None, None),
+                out_shardings=(pshard, oshard, None),
+                donate_argnums=(0, 1))
 
         losses = []
         detector = StragglerDetector()
@@ -84,33 +116,41 @@ def train(cfg: ModelConfig, cell: ShapeCell, *, steps: int, mesh=None,
                 holder = {}
 
                 def do_step():
-                    p, o, m = step_fn(params, opt_state, batch,
-                                      jnp.int32(step))
+                    if int8:
+                        p, o, c, m = step_fn(params, opt_state, comp_state,
+                                             batch, jnp.int32(step))
+                        holder.update(c=c)
+                    else:
+                        p, o, m = step_fn(params, opt_state, batch,
+                                          jnp.int32(step))
                     jax.block_until_ready(m["loss"])
                     holder.update(p=p, o=o, m=m)
 
                 dt = sup.step(do_step, step)
                 params, opt_state = holder["p"], holder["o"]
+                if int8:
+                    comp_state = holder["c"]
                 loss = float(holder["m"]["loss"])
                 losses.append(loss)
                 if step % log_every == 0 or step == steps - 1:
                     log_fn(f"[train] step {step:5d} loss {loss:.4f} "
                            f"({dt*1e3:.0f} ms)")
                 if mgr and (step + 1) % ckpt_every == 0:
-                    mgr.save(step + 1, {"params": params,
-                                        "opt_state": opt_state})
+                    mgr.save(step + 1, ckpt_tree())
         if mgr:
-            mgr.save(steps, {"params": params, "opt_state": opt_state})
+            mgr.save(steps, ckpt_tree())
             mgr.wait()
     return {"losses": losses, "resumed_from": start_step or None,
             "stragglers": stragglers, "params": params}
 
 
-def _restore(mgr, params, opt_state, pshard, oshard):
-    tree = {"params": params, "opt_state": opt_state}
-    shardings = {"params": pshard, "opt_state": oshard}
-    restored, step = mgr.restore_latest(tree, shardings)
-    return (restored["params"], restored["opt_state"]), step
+def parse_bytes(spec: str) -> int:
+    """'512M' / '8G' / '1e9' / '123456' -> bytes."""
+    spec = str(spec).strip()
+    mult = {"K": 2 ** 10, "M": 2 ** 20, "G": 2 ** 30, "T": 2 ** 40}
+    if spec and spec[-1].upper() in mult:
+        return int(float(spec[:-1]) * mult[spec[-1].upper()])
+    return int(float(spec))
 
 
 def main():
@@ -128,6 +168,13 @@ def main():
                          "(requires real devices)")
     ap.add_argument("--remat", default=None)
     ap.add_argument("--grad-dtype", default=None)
+    ap.add_argument("--compress", default="none",
+                    choices=["none", "bf16", "int8"],
+                    help="gradient wire compression (optim/compress.py)")
+    ap.add_argument("--mem-budget", default=None,
+                    help="activation-memory budget in bytes (suffixes "
+                         "K/M/G); the repro.mem planner picks the depth "
+                         "remat policy for it, overriding --remat")
     args = ap.parse_args()
 
     full = get_arch(args.arch)
@@ -138,10 +185,22 @@ def main():
     if args.remat:
         cfg = dataclasses.replace(cfg, remat=args.remat)
     cell = ShapeCell("cli", args.seq, args.batch, "train")
+    if args.mem_budget is not None:
+        from repro.mem.planner import plan_depth_remat
+        budget = parse_bytes(args.mem_budget)
+        remat, ncheck, fits = plan_depth_remat(cfg, cell, budget)
+        print(f"[train] mem budget {budget} B -> depth remat={remat!r} "
+              f"ncheck={ncheck}")
+        if not fits:
+            print("[train] WARNING: no depth-checkpointing policy fits "
+                  "this budget — proceeding with the minimum-memory plan, "
+                  "expect to exceed it")
+        cfg = dataclasses.replace(cfg, remat=remat, ncheck=ncheck)
     t0 = time.time()
     out = train(cfg, cell, steps=args.steps, mesh=mesh,
                 ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
-                accum=args.accum, lr=args.lr, grad_dtype=args.grad_dtype)
+                accum=args.accum, lr=args.lr, grad_dtype=args.grad_dtype,
+                compress=None if args.compress == "none" else args.compress)
     print(f"[train] done in {time.time()-t0:.1f}s; "
           f"final loss {out['losses'][-1]:.4f}")
 

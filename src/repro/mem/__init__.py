@@ -1,0 +1,28 @@
+"""repro.mem — adjoint memory planning and checkpoint offload.
+
+The paper's contribution is a *tunable* memory/recompute trade (Table 2,
+Prop. 2); this package makes the tuning automatic:
+
+  model    analytic per-policy cost model (peak bytes, extra f-evals) and
+           the measurement machinery that grounds it in lowered HLO;
+  planner  ``plan_odeint`` — solve for the cheapest reverse-accurate policy
+           under a byte budget (drives ``odeint(adjoint="auto",
+           mem_budget=...)``) and ``plan_depth_remat`` for the LM stack;
+  offload  device / pinned-host / host-spill checkpoint stores the adjoint
+           write paths go through (``odeint(..., offload=...)``).
+"""
+from repro.mem.model import (CostEstimate, f_activation_bytes,
+                             max_fitting_ncheck, measure_reverse_cost,
+                             policy_cost, tree_bytes)
+from repro.mem.offload import (CheckpointStore, DeviceStore, HostStore,
+                               SpillStore, host_memory_kind, make_store)
+from repro.mem.planner import (Plan, candidate_costs, plan_depth_remat,
+                               plan_odeint)
+
+__all__ = [
+    "CostEstimate", "policy_cost", "tree_bytes", "f_activation_bytes",
+    "max_fitting_ncheck", "measure_reverse_cost",
+    "CheckpointStore", "DeviceStore", "HostStore", "SpillStore",
+    "make_store", "host_memory_kind",
+    "Plan", "plan_odeint", "candidate_costs", "plan_depth_remat",
+]

@@ -1,0 +1,213 @@
+"""Analytic per-policy memory/compute cost model (the paper's Table 2).
+
+Maps every adjoint policy to (peak live bytes, extra reverse-pass f
+evaluations) as a function of N_t (steps), the tableau's stage counts, the
+state size, and — for revolve — N_c (checkpoint slots):
+
+  policy      ckpt storage (bytes)                 NFE-B (extra f evals)
+  naive       N_t * N_s * A_f    (AD residuals)    0
+  continuous  0                                    N_s * N_t   (not rev-acc)
+  anode       N_t * N_s * A_f    (recompute+AD)    2 N_s N_t
+  aca         N_t * S                              2 N_s N_t
+  pnode       N_t * (N_s+1) * S                    N_s^a N_t
+  pnode2      N_t * S                              (N_s + N_s^a) N_t
+  revolve     (N_c+1) * (N_s+1) * S                N_s p~(N_t,N_c) + N_s^a N_t
+  revolve2    (N_c+1+seg*(N_s+1)) * S              ~N_s (N_t-N_c) + N_s^a N_t
+
+with S = state bytes, N_s^a = stages the discrete adjoint linearizes
+(``adjoint_stages``), p~ the Prop-2 recompute optimum, and A_f the bytes of
+AD residuals one f evaluation leaves behind (``f_activation_bytes`` — the
+N_l-dependent term that makes NODE-naive the steepest curve in Fig. 3).
+An ``offload`` tier moves the ckpt-storage term off device (see
+``repro.mem.offload``); it never changes NFE-B.
+
+The model is validated against measured byte counts of the lowered reverse
+pass (``launch/hlo_cost.peak_live_bytes`` on the compiled HLO) in
+tests/test_mem.py, and ``measure_reverse_cost`` here is the measurement
+used by both the planner's verify step and the fig3/mem_plan benchmarks.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import tree_util as jtu
+
+from repro.core import revolve as revolve_mod
+from repro.core.adjoint import (adjoint_stages, checkpoint_floats,
+                                nfe_backward)
+from repro.core.tableaus import get_tableau
+
+PyTree = Any
+
+#: policies whose gradients are exact reorderings of the naive chain rule
+REVERSE_ACCURATE = ("naive", "anode", "aca", "pnode", "pnode2", "revolve",
+                    "revolve2")
+
+
+def tree_bytes(tree: PyTree) -> int:
+    """Total bytes of a pytree of (possibly abstract) arrays."""
+    total = 0
+    for leaf in jtu.tree_leaves(tree):
+        size = getattr(leaf, "size", None)
+        dtype = getattr(leaf, "dtype", None)
+        if size is None or dtype is None:
+            leaf = jnp.asarray(leaf)
+            size, dtype = leaf.size, leaf.dtype
+        total += int(size) * jnp.dtype(dtype).itemsize
+    return total
+
+
+def f_activation_bytes(f: Callable, u0: PyTree, theta: PyTree,
+                       t: float = 0.0) -> int:
+    """AD-residual bytes one ``f`` evaluation leaves behind: the summed
+    output bytes of every equation in f's jaxpr — the O(N_l) depth term
+    that naive/anode pay per stage and the high-level adjoint avoids."""
+    try:
+        jaxpr = jax.make_jaxpr(lambda u, th: f(u, th, t))(u0, theta)
+    except Exception:
+        return tree_bytes(u0)
+    total = 0
+    for eqn in jaxpr.jaxpr.eqns:
+        for var in eqn.outvars:
+            aval = getattr(var, "aval", None)
+            if aval is not None and hasattr(aval, "shape"):
+                n = 1
+                for d in aval.shape:
+                    n *= int(d)
+                total += n * jnp.dtype(aval.dtype).itemsize
+    return max(total, tree_bytes(u0))
+
+
+@dataclass(frozen=True)
+class CostEstimate:
+    """One Table-2 row instantiated at concrete sizes."""
+    policy: str
+    ncheck: Optional[int]
+    offload: Optional[str]
+    ckpt_bytes: int        # checkpoint storage between fwd and bwd sweeps
+    work_bytes: int        # transient working set of one reverse step
+    extra_fevals: int      # NFE-B: reverse-pass f evaluations
+    reverse_accurate: bool
+
+    @property
+    def peak_bytes(self) -> int:
+        """Predicted device-live peak: offloaded ckpt storage leaves the
+        device, everything else stays."""
+        if self.offload in ("host", "spill"):
+            return self.work_bytes
+        return self.ckpt_bytes + self.work_bytes
+
+
+def policy_cost(policy: str, *, method: str, n_steps: int, state_bytes: int,
+                theta_bytes: int = 0, f_act_bytes: Optional[int] = None,
+                ncheck: Optional[int] = None,
+                offload: Optional[str] = None) -> CostEstimate:
+    """Analytic (peak bytes, extra f-evals) for one policy instance."""
+    tab = get_tableau(method)
+    s = tab.num_stages
+    fa = f_act_bytes if f_act_bytes is not None else state_bytes
+    # one step's stages + a few state copies in flight + grad accumulators
+    work = (s + 3) * state_bytes + 3 * theta_bytes
+
+    if policy in ("naive", "anode"):
+        # AD through the (re)computed forward: every stage's f residuals
+        ckpt = n_steps * s * fa
+        if policy == "anode":
+            ckpt += state_bytes  # the block-input checkpoint itself
+    elif policy == "continuous":
+        ckpt = 0
+    else:
+        ckpt = checkpoint_floats(method, n_steps, policy,
+                                 state_bytes, ncheck=ncheck)
+    extra = nfe_backward(method, n_steps, policy,
+                         ncheck=ncheck) if policy != "naive" else 0
+    return CostEstimate(policy=policy, ncheck=ncheck, offload=offload,
+                        ckpt_bytes=int(ckpt), work_bytes=int(work),
+                        extra_fevals=int(extra),
+                        reverse_accurate=policy in REVERSE_ACCURATE)
+
+
+def max_fitting_ncheck(budget: int, *, method: str, n_steps: int,
+                       state_bytes: int, theta_bytes: int = 0) -> Optional[int]:
+    """Largest N_c whose revolve checkpoint set fits the byte budget
+    (Table-2 storage (N_c+1)(N_s+1)S), clamped to the valid [1, N_t-1]
+    range; None if even N_c = 1 does not fit."""
+    s = get_tableau(method).num_stages
+    probe = policy_cost("revolve", method=method, n_steps=n_steps,
+                        state_bytes=state_bytes, theta_bytes=theta_bytes,
+                        ncheck=1)
+    avail = budget - probe.work_bytes
+    per_slot = (s + 1) * state_bytes
+    if per_slot <= 0:
+        return n_steps - 1
+    k = avail // per_slot - 1
+    if k < 1:
+        return None
+    return int(min(k, n_steps - 1))
+
+
+# ---------------------------------------------------------------------------
+# measurement: the model's ground truth
+# ---------------------------------------------------------------------------
+
+_MEASURE_CACHE: Dict[Tuple, Dict[str, float]] = {}
+
+
+def _struct_key(tree: PyTree) -> Tuple:
+    leaves, treedef = jtu.tree_flatten(tree)
+    return (str(treedef),) + tuple(
+        (tuple(jnp.shape(x)), str(jnp.result_type(x))) for x in leaves)
+
+
+def measure_reverse_cost(f: Callable, u0: PyTree, theta: PyTree, *,
+                         dt: float, n_steps: int, t0: float = 0.0,
+                         method: str = "rk4", policy: str = "pnode",
+                         ncheck: Optional[int] = None,
+                         offload: Optional[str] = None) -> Dict[str, float]:
+    """Lower + compile the reverse pass (grad of a canonical scalar loss of
+    the solve) and measure its peak bytes two ways:
+
+      hlo_peak_bytes  liveness sweep over the optimized HLO text
+                      (``launch.hlo_cost.peak_live_bytes``) — the metric the
+                      planner's budget check and the acceptance tests use;
+      temp_bytes /    XLA's own compiled buffer-assignment accounting
+      argument_bytes  (``compiled.memory_analysis()``), kept as a
+                      cross-check column in the benchmarks.
+
+    Results are cached on (f identity, arg structure, solve configuration):
+    a planner verify step compiles each candidate at most once per session.
+    """
+    from repro.core.adjoint import odeint  # late: avoid import cycle
+    from repro.launch.hlo_cost import peak_live_bytes
+
+    key = (id(f), _struct_key(u0), _struct_key(theta), float(dt),
+           int(n_steps), float(t0), method, policy, ncheck, offload,
+           bool(jax.config.jax_enable_x64))
+    hit = _MEASURE_CACHE.get(key)
+    if hit is not None:
+        return hit[1]
+
+    def loss(u0_, th_):
+        uf = odeint(f, u0_, th_, dt=dt, n_steps=n_steps, t0=t0,
+                    method=method, adjoint=policy, ncheck=ncheck,
+                    offload=offload)
+        return sum(jnp.sum(x * x) for x in jtu.tree_leaves(uf))
+
+    grad_fn = jax.grad(loss, argnums=(0, 1))
+    compiled = jax.jit(grad_fn).lower(u0, theta).compile()
+    mem = compiled.memory_analysis()
+    out = {
+        "hlo_peak_bytes": float(peak_live_bytes(compiled.as_text())),
+        "temp_bytes": float(getattr(mem, "temp_size_in_bytes", -1.0))
+        if mem is not None else -1.0,
+        "argument_bytes": float(getattr(mem, "argument_size_in_bytes", -1.0))
+        if mem is not None else -1.0,
+    }
+    # the entry keeps a strong reference to f: id(f) keys would otherwise
+    # be reusable after garbage collection and alias a different function
+    _MEASURE_CACHE[key] = (f, out)
+    return out

@@ -1,0 +1,292 @@
+"""Checkpoint stores: where adjoint checkpoints live between fwd and bwd.
+
+The revolve/pnode adjoints in ``core/adjoint.py`` write (state, stages)
+checkpoints through one of these stores instead of returning them directly
+as ``custom_vjp`` residuals.  Three tiers:
+
+  device   checkpoints stay traced values and travel through the residual
+           pytree — exactly the seed behavior (XLA keeps them in device
+           memory for the whole fwd->bwd window).
+  host     checkpoints are moved to the backend's pinned-host memory space
+           with ``jax.device_put(x, TransferToMemoryKind("pinned_host"))``
+           at put time and brought back at get time; the residual pytree
+           carries host-resident arrays, so device-live memory between the
+           sweeps is O(working set).  Sharded arrays keep their layout: a
+           memory-kind transfer preserves the NamedSharding, so each device
+           spills its own shard.  On backends without a pinned_host space
+           (XLA:CPU in this container exposes only unpinned_host) the tier
+           degrades to ``device`` and records ``effective_tier`` so callers
+           and tests can see the downgrade.
+  spill    checkpoints leave the XLA program entirely through a
+           token-threaded ``jax.pure_callback`` into a host-side numpy dict.
+           The residual is one f32 scalar (the ordering token), so the
+           reverse pass's device-live set is O(ncheck) / O(1) regardless of
+           ``n_steps``.  Ordering: every write returns a fresh token and
+           every read consumes the latest one, so writes are
+           data-dependencies of reads and XLA cannot reorder or elide
+           them; slot reads return a token too, ordering subsequent
+           frees/overwrites after the reads that precede them.
+           (``io_callback(ordered=True)`` would be the natural primitive,
+           but its effects are silently dropped inside ``custom_vjp`` rules
+           on jax 0.4.37 — verified empirically — hence the token chain.)
+
+Two addressing modes, matching the two checkpoint write paths:
+
+  * slot puts/gets (``put``/``get``/``free``) take a *Python int* slot —
+    the trace-time-unrolled revolve schedule addresses checkpoints by step
+    index known at trace time;
+  * indexed puts/gets (``write_at``/``read_at``) take a *traced* index and
+    thread the token explicitly — the scanned pnode forward sweep and the
+    adaptive ring buffer address by a loop-carried counter.
+
+Table-2 mapping (see ``repro.mem.model``): the store only changes WHERE
+N_c*(N_s+1) checkpoint vectors live, never how many f-evaluations the
+policy performs — spill grads are bitwise-identical to device grads
+(tests/test_mem.py).
+
+Not supported under ``vmap`` (the callback sees one logical index); stores
+are per-``odeint``-call objects, so concurrent solves never share keys.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import tree_util as jtu
+
+PyTree = Any
+
+TIERS = ("device", "host", "spill")
+
+_TOKEN_SDS = jax.ShapeDtypeStruct((), jnp.float32)
+
+
+def host_memory_kind() -> Optional[str]:
+    """The backend's off-device host memory space, or None if unavailable."""
+    try:
+        kinds = [m.kind for m in jax.devices()[0].addressable_memories()]
+    except Exception:  # pragma: no cover - very old jaxlib
+        return None
+    default = None
+    try:
+        default = jax.devices()[0].default_memory().kind
+    except Exception:  # pragma: no cover
+        pass
+    for kind in ("pinned_host", "unpinned_host"):
+        if kind in kinds and kind != default:
+            return kind
+    return None
+
+
+def make_store(tier: Optional[str]) -> "CheckpointStore":
+    if tier in (None, "device"):
+        return DeviceStore()
+    if tier == "host":
+        return HostStore()
+    if tier == "spill":
+        return SpillStore()
+    raise ValueError(f"unknown offload tier {tier!r}; one of {TIERS}")
+
+
+class CheckpointStore:
+    """Common interface; concrete tiers override the transfer points.
+
+    Forward sweep:   put(slot, tree)* -> pack() returned as residuals.
+    Reverse sweep:   unpack(res, slots); then get/put/free in any order the
+    schedule demands (bwd puts come from revolve "advance" actions).
+    Scanned sweeps:  token = init_token(); token = write_at(token, i, tree);
+    read_at(token, i) — token must ride the scan carry and cross fwd->bwd
+    through the residuals.
+    """
+
+    tier = "device"
+
+    def __init__(self):
+        self._vals: Dict[int, PyTree] = {}
+        self._order: List[int] = []
+        self.effective_tier = self.tier
+
+    # -- slot-addressed (trace-time revolve schedule) ----------------------
+    def put(self, slot: int, tree: PyTree) -> None:
+        if slot not in self._vals:
+            self._order.append(slot)
+        self._vals[slot] = self._to_store(tree)
+
+    def get(self, slot: int) -> PyTree:
+        return self._from_store(self._vals[slot])
+
+    def free(self, slot: int) -> None:
+        self._vals.pop(slot, None)
+
+    def pack(self) -> PyTree:
+        """Residual pytree carrying the forward sweep's checkpoints (in put
+        order — the slot keys themselves are trace-time ints the reverse
+        rule recomputes and passes back to ``unpack``)."""
+        return tuple(self._vals[s] for s in self._order)
+
+    def unpack(self, res: PyTree, slots) -> None:
+        self._vals = dict(zip(slots, res))
+        self._order = list(slots)
+
+    # -- index-addressed (scanned pnode / adaptive ring buffer) ------------
+    def init_token(self):
+        return jnp.zeros((), jnp.float32)
+
+    def write_at(self, token, idx, tree: PyTree, keep=None):
+        raise NotImplementedError(
+            f"offload tier {self.tier!r} does not support scanned "
+            "(traced-index) checkpoint writes; use 'spill'")
+
+    def read_at(self, token, idx, valid=None) -> PyTree:
+        raise NotImplementedError(
+            f"offload tier {self.tier!r} does not support scanned reads")
+
+    # -- transfer points ----------------------------------------------------
+    def _to_store(self, tree: PyTree) -> PyTree:
+        return tree
+
+    def _from_store(self, tree: PyTree) -> PyTree:
+        return tree
+
+
+class DeviceStore(CheckpointStore):
+    tier = "device"
+
+
+class HostStore(CheckpointStore):
+    """Pinned-host residuals via memory-kind transfer (degrades to device)."""
+
+    tier = "host"
+
+    def __init__(self):
+        super().__init__()
+        self._kind = host_memory_kind()
+        self.effective_tier = "host" if self._kind else "device"
+
+    def _transfer(self, tree: PyTree, kind: str) -> PyTree:
+        try:
+            from jax._src.sharding_impls import TransferToMemoryKind
+        except ImportError:  # pragma: no cover - newer jax moved it
+            from jax.sharding import TransferToMemoryKind  # type: ignore
+        return jtu.tree_map(
+            lambda x: jax.device_put(x, TransferToMemoryKind(kind)), tree)
+
+    def _to_store(self, tree: PyTree) -> PyTree:
+        if self._kind is None:
+            return tree
+        return self._transfer(tree, self._kind)
+
+    def _from_store(self, tree: PyTree) -> PyTree:
+        if self._kind is None:
+            return tree
+        return self._transfer(tree, "device")
+
+
+class SpillStore(CheckpointStore):
+    """Host-dict spill through token-threaded pure_callback.
+
+    The store object itself is a static (nondiff) argument of the
+    ``custom_vjp`` that uses it, so the same instance — and the same host
+    dict — is visible to both the fwd and bwd rules.  Leaf shape/dtype
+    metadata is recorded at put-trace time (object attributes persist from
+    the fwd trace to the bwd trace) so reads know their result shapes.
+    """
+
+    tier = "spill"
+
+    def __init__(self):
+        super().__init__()
+        self._host: Dict[Any, List[np.ndarray]] = {}
+        self._meta: Dict[Any, Tuple[Any, Tuple[jax.ShapeDtypeStruct, ...]]] = {}
+        self._tok = None
+        self.effective_tier = "spill"
+
+    # -- host-side callbacks (never traced) ---------------------------------
+    def _cb_write(self, token, slot, *leaves):
+        self._host[int(slot)] = [np.asarray(x).copy() for x in leaves]
+        return np.float32(0)
+
+    def _cb_write_if(self, token, slot, keep, *leaves):
+        if bool(keep):
+            self._host[int(slot)] = [np.asarray(x).copy() for x in leaves]
+        return np.float32(0)
+
+    def _cb_read(self, meta_key, strict):
+        def read(token, slot):
+            _, sds = self._meta[meta_key]
+            leaves = self._host.get(int(slot))
+            if leaves is None:
+                if strict:
+                    # a schedule bug or a reordered free — fail loudly
+                    # rather than silently contributing zero gradients
+                    raise KeyError(f"spill store: slot {int(slot)} read "
+                                   "before it was written (or after free)")
+                return tuple(np.zeros(s.shape, s.dtype) for s in sds)
+            if strict:
+                return (np.float32(0),) + tuple(np.asarray(x)
+                                                for x in leaves)
+            return tuple(np.asarray(x) for x in leaves)
+        return read
+
+    def _cb_free(self, token, slot):
+        self._host.pop(int(slot), None)
+        return np.float32(0)
+
+    # -- metadata ------------------------------------------------------------
+    def _record(self, key, tree: PyTree):
+        leaves, treedef = jtu.tree_flatten(tree)
+        sds = tuple(jax.ShapeDtypeStruct(jnp.shape(x), jnp.result_type(x))
+                    for x in leaves)
+        self._meta[key] = (treedef, sds)
+        return leaves
+
+    # -- slot-addressed ------------------------------------------------------
+    def put(self, slot: int, tree: PyTree) -> None:
+        if self._tok is None:
+            self._tok = self.init_token()
+        leaves = self._record("slot", tree)
+        self._tok = jax.pure_callback(
+            self._cb_write, _TOKEN_SDS, self._tok, np.int32(slot), *leaves)
+
+    def get(self, slot: int) -> PyTree:
+        # reads also return a fresh token that subsequent free/put calls
+        # consume: without that anti-dependency edge the scheduler could
+        # legally run a free (or an overwriting put) before the read
+        treedef, sds = self._meta["slot"]
+        out = jax.pure_callback(
+            self._cb_read("slot", strict=True), (_TOKEN_SDS,) + sds,
+            self._tok, np.int32(slot))
+        self._tok = out[0]
+        return jtu.tree_unflatten(treedef, out[1:])
+
+    def free(self, slot: int) -> None:
+        self._tok = jax.pure_callback(
+            self._cb_free, _TOKEN_SDS, self._tok, np.int32(slot))
+
+    def pack(self) -> PyTree:
+        return self._tok
+
+    def unpack(self, res: PyTree, slots) -> None:
+        self._tok = res
+
+    # -- index-addressed -----------------------------------------------------
+    def write_at(self, token, idx, tree: PyTree, keep=None):
+        leaves = self._record("idx", tree)
+        if keep is None:
+            return jax.pure_callback(
+                self._cb_write, _TOKEN_SDS, token, idx, *leaves)
+        return jax.pure_callback(
+            self._cb_write_if, _TOKEN_SDS, token, idx, keep, *leaves)
+
+    def read_at(self, token, idx, valid=None) -> PyTree:
+        # `valid` is advisory: missing/invalid slots read as zeros and the
+        # caller masks them out (matching the ring-buffer where-guards).
+        # Indexed reads do not thread a token — the scanned reverse sweeps
+        # are a read-only phase (no frees or overwrites until the next
+        # execution, which the host serializes).
+        treedef, sds = self._meta["idx"]
+        leaves = jax.pure_callback(self._cb_read("idx", strict=False), sds,
+                                   token, idx)
+        return jtu.tree_unflatten(treedef, leaves)

@@ -1,0 +1,197 @@
+"""Byte-budget planner: solve for the Table-2 point instead of hand-picking.
+
+Given a device-memory budget B, rank every reverse-accurate policy instance
+by its extra reverse-pass f evaluations (the paper's NFE-B) and choose the
+cheapest one whose peak bytes fit:
+
+  naive(0 extra)  >  pnode  >  revolve(N_c as large as fits)  >  pnode2
+  >  aca  >  [nothing fits on device]  pnode + spill offload
+
+For revolve the planner picks the *largest* N_c whose checkpoint set
+(N_c+1)(N_s+1)S fits — by Prop. 2 that minimizes recomputation, so a larger
+budget can never cost more f evaluations (monotonicity; tested).  The spill
+tier is a last resort: it keeps NFE-B at pnode's optimum but pays PCIe/host
+traffic the NFE metric does not see, so it never outranks an in-device
+policy that fits.
+
+Two verify modes:
+
+  "model"    trust the analytic model (no compilation; use for planning
+             sweeps and tests that must stay cheap);
+  "measure"  walk the candidate list compiling each candidate's reverse
+             pass and checking the *measured* peak bytes
+             (``hlo_cost.peak_live_bytes``) against the budget — the mode
+             ``odeint(adjoint="auto", mem_budget=...)`` uses by default, so
+             the policy it returns provably fits on the lowered HLO (the
+             acceptance criterion).  Measurements are cached per
+             (f, shapes, config), so a training loop pays the compile walk
+             once.
+
+``plan_depth_remat`` applies the same budget logic to the depth dimension
+(the LM layer stack's remat policy) for launch/train.py's --mem-budget.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Callable, List, Optional, Tuple
+
+from jax import tree_util as jtu
+
+from repro.core.tableaus import get_tableau
+from repro.mem.model import (CostEstimate, f_activation_bytes,
+                             max_fitting_ncheck, measure_reverse_cost,
+                             policy_cost, tree_bytes)
+
+PyTree = Any
+
+
+@dataclass(frozen=True)
+class Plan:
+    policy: str
+    ncheck: Optional[int]
+    offload: Optional[str]
+    predicted: CostEstimate
+    budget: Optional[int]
+    fits: bool                      # predicted/measured peak <= budget
+    measured_bytes: Optional[float] = None   # set in verify="measure"
+    candidates: Tuple[CostEstimate, ...] = field(default=())
+
+    @property
+    def extra_fevals(self) -> int:
+        return self.predicted.extra_fevals
+
+
+def candidate_costs(*, method: str, n_steps: int, state_bytes: int,
+                    theta_bytes: int = 0, f_act_bytes: Optional[int] = None,
+                    mem_budget: Optional[int] = None) -> List[CostEstimate]:
+    """In-device candidates, cheapest recomputation first.  revolve appears
+    once, at the largest N_c that fits the budget (or N_c=1 when nothing
+    does, as the minimum-memory in-device fallback)."""
+    kw = dict(method=method, n_steps=n_steps, state_bytes=state_bytes,
+              theta_bytes=theta_bytes, f_act_bytes=f_act_bytes)
+    cands = [policy_cost("naive", **kw), policy_cost("pnode", **kw)]
+    if n_steps >= 2:
+        k = None
+        if mem_budget is not None:
+            k = max_fitting_ncheck(mem_budget, method=method,
+                                   n_steps=n_steps, state_bytes=state_bytes,
+                                   theta_bytes=theta_bytes)
+        cands.append(policy_cost("revolve", ncheck=k if k else 1, **kw))
+    cands.append(policy_cost("pnode2", **kw))
+    cands.append(policy_cost("aca", **kw))
+    cands.sort(key=lambda c: (c.extra_fevals, c.peak_bytes))
+    return cands
+
+
+def plan_odeint(f: Callable, u0: PyTree, theta: PyTree, *, dt: float,
+                n_steps: int, t0: float = 0.0, method: str = "rk4",
+                mem_budget: Optional[int] = None,
+                verify: str = "measure") -> Plan:
+    """Pick (policy, ncheck, offload) for one odeint call under a budget."""
+    if mem_budget is None:
+        # no constraint: the paper's method — no recompute beyond the
+        # per-stage linearizations, bounded graph depth
+        est = policy_cost("pnode", method=method, n_steps=n_steps,
+                          state_bytes=tree_bytes(u0),
+                          theta_bytes=tree_bytes(theta))
+        return Plan("pnode", None, None, est, None, True)
+    if verify not in ("model", "measure"):
+        raise ValueError(f"verify must be 'model' or 'measure', "
+                         f"got {verify!r}")
+    state_bytes = tree_bytes(u0)
+    theta_bytes = tree_bytes(theta)
+    fa = f_activation_bytes(f, u0, theta, t0)
+    cands = candidate_costs(method=method, n_steps=n_steps,
+                            state_bytes=state_bytes, theta_bytes=theta_bytes,
+                            f_act_bytes=fa, mem_budget=mem_budget)
+
+    measured: Optional[float] = None
+    for cand in cands:
+        if cand.peak_bytes > mem_budget:
+            continue
+        if verify == "measure":
+            m = measure_reverse_cost(
+                f, u0, theta, dt=dt, n_steps=n_steps, t0=t0, method=method,
+                policy=cand.policy, ncheck=cand.ncheck)["hlo_peak_bytes"]
+            if m > mem_budget:
+                continue
+            measured = m
+        return Plan(cand.policy, cand.ncheck, None, cand, mem_budget, True,
+                    measured, tuple(cands))
+
+    if verify == "measure":
+        # the model ruled candidates out; re-walk against measurement in
+        # case the model over-estimated (it is deliberately conservative)
+        for cand in cands:
+            m = measure_reverse_cost(
+                f, u0, theta, dt=dt, n_steps=n_steps, t0=t0, method=method,
+                policy=cand.policy, ncheck=cand.ncheck)["hlo_peak_bytes"]
+            if m <= mem_budget:
+                return Plan(cand.policy, cand.ncheck, None, cand,
+                            mem_budget, True, m, tuple(cands))
+
+    # nothing fits on device: keep pnode's optimal NFE-B and move the
+    # checkpoint storage off device through the spill store
+    est = policy_cost("pnode", method=method, n_steps=n_steps,
+                      state_bytes=state_bytes, theta_bytes=theta_bytes,
+                      f_act_bytes=fa, offload="spill")
+    measured = None
+    fits = est.peak_bytes <= mem_budget
+    if verify == "measure":
+        measured = measure_reverse_cost(
+            f, u0, theta, dt=dt, n_steps=n_steps, t0=t0, method=method,
+            policy="pnode", offload="spill")["hlo_peak_bytes"]
+        fits = measured <= mem_budget
+    return Plan("pnode", None, "spill", est, mem_budget, fits, measured,
+                tuple(cands))
+
+
+# ---------------------------------------------------------------------------
+# depth-level planning (the LM layer stack)
+# ---------------------------------------------------------------------------
+
+def plan_depth_remat(cfg, cell, mem_budget: int,
+                     act_mult: float = 12.0
+                     ) -> Tuple[str, Optional[int], bool]:
+    """Map a byte budget to a depth-checkpointing policy for the layer-stack
+    scan (core/depth_ode.checkpointed_scan): the ResNet<->ODE duality makes
+    the layer stack a forward-Euler solve, so the same Table-2 trade
+    applies with S = one residual-stream state and A ~ act_mult*S the
+    transformer block's live activations.
+
+    Candidates, cheapest recompute first:
+      none     live ~ N_l * A            0 recomputed layers
+      sqrt     live ~ 2*sqrt(N_l) * A    ~N_l recomputed layers (1x each)
+      full     live ~ N_l*S + A          ~N_l recomputed layers, O(1) acts
+      revolve  live ~ N_c*S + seg*A      Prop-2 recompute over layers
+
+    Returns (remat, ncheck, fits); fits=False means even the minimum-live
+    revolve point exceeds the budget (the caller should warn — the plan is
+    best-effort, not a guarantee).
+    """
+    bytes_per = 2 if cfg.compute_dtype in ("bfloat16", "float16") else 4
+    state = cell.global_batch * cell.seq_len * cfg.d_model * bytes_per
+    act = int(act_mult * state)
+    n = cfg.n_layers
+    seg = max(1, int(math.sqrt(n)))
+    options: List[Tuple[str, Optional[int], int]] = [
+        ("none", None, n * act),
+        ("sqrt", None, (seg + math.ceil(n / seg)) * act),
+        ("full", None, n * state + act),
+    ]
+    for remat, ncheck, live in options:
+        if live <= mem_budget:
+            return remat, ncheck, True
+
+    def rev_live(k: int) -> int:
+        # boundary states + one in-flight segment's activations (the
+        # jax.checkpoint segment recomputed under AD in the reverse pass)
+        return k * state + math.ceil(n / (k + 1)) * act
+
+    fitting = [k for k in range(1, n) if rev_live(k) <= mem_budget]
+    if fitting:
+        # most slots that fit => shortest segments => least recompute depth
+        return "revolve", max(fitting), True
+    best = min(range(1, n), key=rev_live) if n > 1 else 1
+    return "revolve", best, False

@@ -6,7 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.launch.hlo_cost import analyze
+from repro.launch.hlo_cost import analyze, peak_live_bytes
 from tests.util import run_with_devices
 
 D = 128
@@ -91,6 +91,46 @@ def test_bytes_scale_with_trip_count():
     _, c5 = _flops_of(make(5), x, w)
     _, c10 = _flops_of(make(10), x, w)
     assert c10.bytes == pytest.approx(2 * c5.bytes, rel=0.1)
+
+
+def test_peak_live_bytes_sees_largest_intermediate():
+    """The liveness sweep must at least account for the biggest live value
+    and stay within a small factor of XLA's own buffer accounting."""
+    w = jax.random.normal(jax.random.PRNGKey(0), (D, D))
+    x = jax.random.normal(jax.random.PRNGKey(1), (D, D))
+
+    def fn(x, w):
+        for _ in range(4):
+            x = jnp.tanh(x @ w)
+        return x
+
+    compiled = jax.jit(fn).lower(x, w).compile()
+    peak = peak_live_bytes(compiled.as_text())
+    mem = compiled.memory_analysis()
+    xla = mem.temp_size_in_bytes + mem.argument_size_in_bytes
+    assert peak >= D * D * 4  # one live matrix, at minimum
+    assert xla * 0.5 <= peak <= xla * 6, (peak, xla)
+
+
+def test_peak_live_bytes_sees_scan_stacked_residuals():
+    """A scan that stacks residuals must dominate the peak (this is the
+    structure of the naive/pnode reverse passes the planner compares)."""
+    w = jax.random.normal(jax.random.PRNGKey(0), (D, D))
+    x = jax.random.normal(jax.random.PRNGKey(1), (D, D))
+
+    def make(n):
+        def fn(x, w):
+            def body(c, _):
+                return jnp.tanh(c @ w), c
+            return jax.lax.scan(body, x, None, length=n)
+        return fn
+
+    peaks = []
+    for n in (4, 16):
+        compiled = jax.jit(make(n)).lower(x, w).compile()
+        peaks.append(peak_live_bytes(compiled.as_text()))
+        assert peaks[-1] >= n * D * D * 4  # the stacked ys buffer
+    assert peaks[1] > 2 * peaks[0]  # grows with trip count
 
 
 @pytest.mark.slow
