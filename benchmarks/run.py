@@ -2,8 +2,12 @@
 
   PYTHONPATH=src python -m benchmarks.run            # quick versions
   PYTHONPATH=src python -m benchmarks.run --full     # full sweeps
-  PYTHONPATH=src python -m benchmarks.run --smoke    # CI: mem_plan only,
-                                                    # writes BENCH_2.json
+  PYTHONPATH=src python -m benchmarks.run --smoke    # CI: mem_plan +
+                                                    # hotpath; writes
+                                                    # BENCH_2.json and
+                                                    # BENCH_3.json, fails
+                                                    # on host-callback
+                                                    # regressions
 """
 from __future__ import annotations
 
@@ -15,14 +19,16 @@ def main() -> None:
     full = "--full" in sys.argv
 
     if "--smoke" in sys.argv:
-        from benchmarks import mem_plan
+        from benchmarks import hotpath, mem_plan
         t0 = time.time()
         mem_plan.main(smoke=True)
+        hotpath.main(smoke=True, check=True)
         print(f"\n== bench smoke done in {time.time()-t0:.1f}s ==")
         return
 
     from benchmarks import (adjoint_discrepancy, cnf_tables, fig3_memory,
-                            mem_plan, roofline, stiff_table8, table2_costs)
+                            hotpath, mem_plan, roofline, stiff_table8,
+                            table2_costs)
 
     sections = [
         ("adjoint_discrepancy (Table 1 / Prop 1)",
@@ -33,6 +39,7 @@ def main() -> None:
         ("stiff_table8 (Table 8 / Fig 5)", stiff_table8.main),
         ("fig3_memory (Fig 3)", fig3_memory.main),
         ("mem_plan (planner / BENCH_2.json)", mem_plan.main),
+        ("hotpath (reverse-pass hot path / BENCH_3.json)", hotpath.main),
         ("roofline (EXPERIMENTS Roofline)", roofline.main),
     ]
 

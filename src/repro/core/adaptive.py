@@ -8,6 +8,14 @@ steps.  We reproduce that here: the forward pass is a bounded
 reverse pass scans the buffer backward applying the per-stage discrete
 adjoint with each step's own h.
 
+The reverse sweep's cost scales with *accepted* steps, not ``max_steps``:
+each slot's adjoint step sits inside a ``lax.cond`` on ``idx < n_accepted``,
+so slots in the invalid tail of the ring buffer execute the identity branch
+— zero f evaluations — instead of computing a masked-out adjoint step as
+the pre-fusion implementation did.  Measured NFE-B is therefore
+``adjoint_stages('dopri5') * n_accepted`` regardless of ``max_steps``
+(BENCH_3's hot-path section asserts this).
+
 Returns (u_final, info) where info carries NFE counters (accepted/rejected) —
 these feed the Table-8 benchmark.
 
@@ -15,10 +23,17 @@ mem — the ring buffer allocates max_steps*(N_s+1) state vectors up front
 (Table-2 pnode storage at the worst-case step count).  ``offload="spill"``
 writes accepted steps through a ``repro.mem.offload`` spill store instead:
 the device carries one token scalar, the host dict holds the checkpoints,
-and the reverse scan streams them back — device-live memory is O(1) states
-for any max_steps, with identical gradients (rejected steps never reach the
-store, mirroring the paper's observation that they cost the adjoint
-nothing).
+and the reverse sweep prefetches them back one ``offload_segment``-sized
+chunk per host callback (``store.prefetch``; segments whose first slot is
+past ``n_accepted`` are cond-skipped, so host round-trips are
+O(n_accepted / segment), not O(max_steps)).  Device-live memory is
+O(segment) states for any max_steps, with identical gradients (rejected
+steps never reach the store, mirroring the paper's observation that they
+cost the adjoint nothing).
+
+``fused_stages=True`` lowers the RK stage updates (forward) and per-stage
+adjoint recursion (reverse) through the Pallas ``fused_lincomb`` kernel
+(interpret-mode on CPU) — same flag and caveats as ``odeint``.
 """
 from __future__ import annotations
 
@@ -64,37 +79,54 @@ def odeint_adaptive(f: VectorField, u0: PyTree, theta: PyTree, *,
                     t0: float, t1: float, rtol: float = 1e-6,
                     atol: float = 1e-6, max_steps: int = 512,
                     h0: float | None = None, method: str = "dopri5",
-                    offload: str | None = None):
+                    offload: str | None = None,
+                    offload_segment: int | None = None,
+                    fused_stages: bool = False):
     """Adaptive solve from t0 to t1; differentiable (discrete adjoint over
     accepted steps).  Returns (u_final, AdaptiveInfo).  ``offload="spill"``
     replaces the preallocated ring buffer with a host-side checkpoint store
-    (see module docstring)."""
+    whose reverse sweep prefetches ``offload_segment`` slots per host
+    callback (default ceil(sqrt(max_steps))); ``fused_stages`` selects the
+    Pallas stage-fusion kernels (see module docstring)."""
     if method != "dopri5":
         raise ValueError("adaptive integration currently supports dopri5")
     if offload not in (None, "device", "spill"):
         raise ValueError(
             f"unknown offload tier {offload!r} for the adaptive ring "
             "buffer; one of (None, 'device', 'spill')")
+    if offload_segment is not None and offload != "spill":
+        raise ValueError(
+            "offload_segment only applies to the callback spill tier "
+            f"(offload='spill'); got offload={offload!r}")
     store = None
+    segment = 1
     if offload == "spill":
-        from repro.mem.offload import make_store
+        from repro.core.adjoint import _reject_vmap_offload
+        from repro.mem.offload import default_segment, make_store
+        _reject_vmap_offload(u0, theta, "odeint_adaptive")
         store = make_store("spill")
+        segment = (int(offload_segment) if offload_segment is not None
+                   else default_segment(int(max_steps)))
+        segment = max(1, min(segment, int(max_steps)))
     h_init = float(h0) if h0 is not None else (float(t1) - float(t0)) / 100.0
     u_final, info = _odeint_adaptive(f, float(t0), float(t1), float(rtol),
                                      float(atol), int(max_steps),
-                                     float(h_init), store, u0, theta)
+                                     float(h_init), store, segment,
+                                     bool(fused_stages), u0, theta)
     return u_final, info
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3, 4, 5, 6, 7))
-def _odeint_adaptive(f, t0, t1, rtol, atol, max_steps, h0, store, u0, theta):
+@functools.partial(jax.custom_vjp,
+                   nondiff_argnums=(0, 1, 2, 3, 4, 5, 6, 7, 8, 9))
+def _odeint_adaptive(f, t0, t1, rtol, atol, max_steps, h0, store, segment,
+                     fused, u0, theta):
     out, _res = _adaptive_fwd_solve(f, t0, t1, rtol, atol, max_steps, h0,
-                                    store, u0, theta)
+                                    store, fused, u0, theta)
     return out
 
 
-def _adaptive_fwd_solve(f, t0, t1, rtol, atol, max_steps, h0, store, u0,
-                        theta):
+def _adaptive_fwd_solve(f, t0, t1, rtol, atol, max_steps, h0, store, fused,
+                        u0, theta):
     tab = DOPRI5
     s = tab.num_stages
     order = tab.order
@@ -122,8 +154,8 @@ def _adaptive_fwd_solve(f, t0, t1, rtol, atol, max_steps, h0, store, u0,
     def body(carry):
         u, t, h, n_acc, n_rej, bufs, err_prev = carry
         h = jnp.minimum(h, t1 - t)
-        ks = rk_stages(f, tab, u, theta, t, h)
-        u_new = rk_combine(tab, u, ks, h)
+        ks = rk_stages(f, tab, u, theta, t, h, fused=fused)
+        u_new = rk_combine(tab, u, ks, h, fused=fused)
         # embedded error estimate
         err = None
         for i in range(s):
@@ -174,40 +206,83 @@ def _adaptive_fwd_solve(f, t0, t1, rtol, atol, max_steps, h0, store, u0,
     return (u_f, info), (bufs, n_acc, theta)
 
 
-def _odeint_adaptive_fwd(f, t0, t1, rtol, atol, max_steps, h0, store, u0,
-                         theta):
+def _odeint_adaptive_fwd(f, t0, t1, rtol, atol, max_steps, h0, store,
+                         segment, fused, u0, theta):
     out, res = _adaptive_fwd_solve(f, t0, t1, rtol, atol, max_steps, h0,
-                                   store, u0, theta)
+                                   store, fused, u0, theta)
     return out, res
 
 
-def _odeint_adaptive_bwd(f, t0, t1, rtol, atol, max_steps, h0, store, res, g):
+def _odeint_adaptive_bwd(f, t0, t1, rtol, atol, max_steps, h0, store,
+                         segment, fused, res, g):
     tab = DOPRI5
     bufs, n_acc, theta = res
     g_u, _g_info = g  # ignore cotangents of the counters
     spill = store is not None
+
+    def adjoint_one(lam, mu, u_n, k_n, h_n, t_n):
+        lam2, th_bar = rk_adjoint_step(f, tab, u_n, k_n, theta, t_n, h_n,
+                                       lam, fused=fused)
+        return lam2, tree_add(mu, th_bar)
+
     if not spill:
         sb, kb, hb, tb = bufs
 
-    def body(carry, idx):
-        lam, mu = carry
-        valid = idx < n_acc
-        if spill:
-            u_n, k_n, h_n, t_n = store.read_at(bufs, idx, valid=valid)
-        else:
-            u_n = jtu.tree_map(lambda b: b[idx], sb)
-            k_n = jtu.tree_map(lambda b: b[idx], kb)
-            h_n = hb[idx]
-            t_n = tb[idx]
-        lam2, th_bar = rk_adjoint_step(f, tab, u_n, k_n, theta, t_n, h_n, lam)
-        lam_out = jtu.tree_map(lambda a, b: jnp.where(valid, b, a), lam, lam2)
-        mu_out = jtu.tree_map(
-            lambda m, d: m + jnp.where(valid, d, jnp.zeros_like(d)), mu, th_bar)
-        return (lam_out, mu_out), None
+        def body(carry, idx):
+            # cond (not where-masking): the invalid tail of the ring buffer
+            # takes the identity branch, so reverse-sweep f evaluations
+            # scale with n_accepted, not max_steps
+            def do(c):
+                lam, mu = c
+                u_n = jtu.tree_map(lambda b: b[idx], sb)
+                k_n = jtu.tree_map(lambda b: b[idx], kb)
+                return adjoint_one(lam, mu, u_n, k_n, hb[idx], tb[idx])
 
-    (lam, mu), _ = jax.lax.scan(
-        body, (g_u, tree_zeros_like(theta)),
-        jnp.arange(max_steps), reverse=True)
+            return jax.lax.cond(idx < n_acc, do, lambda c: c, carry), None
+
+        (lam, mu), _ = jax.lax.scan(
+            body, (g_u, tree_zeros_like(theta)),
+            jnp.arange(max_steps), reverse=True)
+        return lam, mu
+
+    # spill tier: segment-prefetched reverse sweep — one host callback per
+    # offload_segment slots, and segments entirely past n_accepted are
+    # cond-skipped (no callback, no f evaluations)
+    seg = max(1, min(segment, max_steps))
+    n_full, remainder = divmod(max_steps, seg)
+    tok = bufs
+
+    def run_segment_bwd(carry, base, m):
+        def proc(args):
+            lam, mu, tok = args
+            tok2, staged = store.prefetch(tok, base, m)  # ONE callback
+
+            def step(c, i):
+                idx = base + i
+
+                def do(c2):
+                    lam, mu = c2
+                    u_n, k_n, h_n, t_n = jtu.tree_map(lambda b: b[i], staged)
+                    return adjoint_one(lam, mu, u_n, k_n, h_n, t_n)
+
+                return jax.lax.cond(idx < n_acc, do, lambda c2: c2, c), None
+
+            (lam, mu), _ = jax.lax.scan(step, (lam, mu), jnp.arange(m),
+                                        reverse=True)
+            return lam, mu, tok2
+
+        return jax.lax.cond(base < n_acc, proc, lambda a: a, carry)
+
+    carry = (g_u, tree_zeros_like(theta), tok)
+    if remainder:  # trailing partial segment holds the highest slots
+        carry = run_segment_bwd(carry, jnp.asarray(n_full * seg), remainder)
+    if n_full:
+        def seg_body(c, s_idx):
+            return run_segment_bwd(c, s_idx * seg, seg), None
+
+        carry, _ = jax.lax.scan(seg_body, carry, jnp.arange(n_full),
+                                reverse=True)
+    lam, mu, _tok = carry
     return lam, mu
 
 

@@ -106,11 +106,56 @@ def _validate_ncheck(adjoint: str, ncheck, n_steps: int) -> int:
     return ncheck
 
 
+#: policies whose reverse pass never differentiates *through* a step graph
+#: (states/stages are checkpointed, the adjoint is the explicit per-stage
+#: recursion) — the only ones the fused Pallas stage kernels apply to:
+#: Pallas calls have no AD rules, so policies that jax.vjp through the
+#: step (naive/continuous/anode/aca) must keep the unfused chain.
+_FUSED_POLICIES = ("pnode", "pnode2", "revolve", "revolve2")
+
+
+def _reject_vmap_offload(u0: PyTree, theta: PyTree, where: str) -> None:
+    """vmap-of-odeint-with-offload fails deep inside the callback machinery
+    with an opaque trace error (or, worse, aliases host-dict slots and
+    returns wrong gradients); detect it up front (satellite task).
+
+    Leaves may be BatchTracers directly (vmap(odeint)) or wrap one deeper
+    in the tracer stack (vmap(grad(...)): JVPTracers whose primals are
+    BatchTracers), so unwrap nested tracers before testing.
+    """
+    try:
+        from jax.interpreters.batching import BatchTracer
+    except ImportError:  # pragma: no cover - future jax moved it
+        return
+
+    def has_batch_tracer(x, depth=0) -> bool:
+        if isinstance(x, BatchTracer):
+            return True
+        if isinstance(x, jax.core.Tracer) and depth < 8:
+            return any(
+                sub is not None and has_batch_tracer(sub, depth + 1)
+                for sub in (getattr(x, "primal", None),
+                            getattr(x, "tangent", None),
+                            getattr(x, "val", None)))
+        return False
+
+    if any(has_batch_tracer(x) for x in jtu.tree_leaves((u0, theta))):
+        raise NotImplementedError(
+            f"vmap over {where} with an offload store is not supported: "
+            "the store's host-side dict sees one logical slot index for "
+            "the entire batch, so per-example checkpoints would alias. "
+            "Workaround: offload='device' (checkpoints ride the residual "
+            "pytree, which vmap understands) — or fold the mapped axis "
+            "into u0's leading batch dimension instead of vmapping.")
+
+
 def odeint(f: VectorField, u0: PyTree, theta: PyTree, *, dt: float,
            n_steps: int, t0: float = 0.0, method: str = "rk4",
            adjoint: str = "pnode", ncheck: int | None = None,
-           offload: str | None = None, mem_budget: int | None = None,
-           mem_verify: str = "measure") -> PyTree:
+           offload: str | None = None, offload_segment: int | None = None,
+           mem_budget: int | None = None,
+           mem_verify: str = "measure",
+           fused_stages: bool = False) -> PyTree:
     """Fixed-step ODE solve, differentiable with the selected adjoint policy.
 
     ``adjoint="auto"`` with ``mem_budget=<bytes>`` delegates the policy (and
@@ -118,12 +163,26 @@ def odeint(f: VectorField, u0: PyTree, theta: PyTree, *, dt: float,
     selects how the planner checks the budget ("measure": against the
     lowered HLO's peak live bytes, compiled once and cached; "model": the
     analytic Table-2 model only, no compilation).  ``offload`` routes the
-    policy's checkpoints through a ``repro.mem.offload`` store tier.
+    policy's checkpoints through a ``repro.mem.offload`` store tier;
+    ``offload_segment`` sets the spill tier's checkpoint-segment length
+    (one host callback per segment; default ceil(sqrt(n_steps)) — see
+    ``repro.mem.offload.default_segment``).
+
+    ``fused_stages=True`` lowers the RK stage-update chain (forward) and
+    the per-stage adjoint recursion (reverse) to single Pallas
+    linear-combination kernels (``kernels.ops.fused_lincomb``;
+    interpret-mode on CPU, like the other kernels).  Gradients are
+    bitwise-identical to the unfused path under jit.  Only the
+    checkpointing policies (pnode/pnode2/revolve/revolve2) support it —
+    the low-level-AD policies differentiate through the step graph and
+    Pallas calls have no AD rules; ``adjoint="auto"`` drops the flag
+    silently if the planner picks such a policy.
     """
     n_steps = int(n_steps)
     if n_steps < 1:
         raise ValueError(f"n_steps must be >= 1, got {n_steps}")
-    if adjoint == "auto":
+    from_auto = adjoint == "auto"
+    if from_auto:
         from repro.mem.planner import plan_odeint  # deferred: import cycle
         plan = plan_odeint(f, u0, theta, dt=float(dt), n_steps=n_steps,
                            t0=float(t0), method=method,
@@ -140,12 +199,40 @@ def odeint(f: VectorField, u0: PyTree, theta: PyTree, *, dt: float,
     if offload not in _OFFLOAD_TIERS:
         raise ValueError(f"unknown offload tier {offload!r}; one of "
                          f"{_OFFLOAD_TIERS}")
+    if fused_stages and adjoint not in _FUSED_POLICIES:
+        if from_auto:
+            fused_stages = False
+        else:
+            raise ValueError(
+                f"fused_stages=True is not supported for "
+                f"adjoint={adjoint!r}: that policy differentiates through "
+                "the step graph and the Pallas stage kernels have no AD "
+                f"rules; use one of {_FUSED_POLICIES}")
+    fused = bool(fused_stages)
     offloaded = offload in ("host", "spill")
     if offloaded and adjoint not in ("pnode", "revolve", "revolve2"):
         raise ValueError(
             f"offload={offload!r} is not supported for adjoint={adjoint!r}: "
             "only policies with explicit per-step checkpoints (pnode, "
             "revolve, revolve2) write through the store")
+    if offload_segment is not None:
+        if offload != "spill":
+            raise ValueError(
+                "offload_segment only applies to the callback spill tier "
+                f"(offload='spill'); got offload={offload!r}")
+        if adjoint != "pnode":
+            raise ValueError(
+                "offload_segment only applies to the scanned pnode sweep "
+                f"(adjoint='pnode'); adjoint={adjoint!r} checkpoints are "
+                "slot-addressed at trace time and already pay one callback "
+                "per checkpoint-schedule action, so the knob would be "
+                "silently ignored")
+        offload_segment = int(offload_segment)
+        if offload_segment < 1:
+            raise ValueError(
+                f"offload_segment must be >= 1, got {offload_segment}")
+    if offloaded:
+        _reject_vmap_offload(u0, theta, "odeint")
     if adjoint == "naive":
         u_final, _ = solve_fixed(f, method, u0, theta, t0, dt, n_steps)
         return u_final
@@ -155,18 +242,21 @@ def odeint(f: VectorField, u0: PyTree, theta: PyTree, *, dt: float,
         store = make_store(offload)
         impl = _odeint_revolve if adjoint == "revolve" else _odeint_revolve2
         return impl(f, method, float(t0), float(dt), n_steps, ncheck,
-                    store, u0, theta)
+                    store, fused, u0, theta)
     if adjoint == "pnode" and offloaded:
         if offload == "host":
             raise ValueError(
                 "offload='host' applies to trace-time checkpoint sites "
                 "(revolve/revolve2); the scanned pnode sweep offloads "
                 "through offload='spill'")
-        from repro.mem.offload import make_store
+        from repro.mem.offload import default_segment, make_store
+        segment = (offload_segment if offload_segment is not None
+                   else default_segment(n_steps))
         return _odeint_pnode_spill(f, method, float(t0), float(dt), n_steps,
-                                   make_store("spill"), u0, theta)
+                                   make_store("spill"), min(segment, n_steps),
+                                   fused, u0, theta)
     return _odeint_cv(f, method, float(t0), float(dt), int(n_steps),
-                      adjoint, u0, theta)
+                      adjoint, fused, u0, theta)
 
 
 def nfe_forward(method: str, n_steps: int) -> int:
@@ -251,13 +341,14 @@ def checkpoint_floats(method: str, n_steps: int, adjoint: str, state_size: int,
 # custom_vjp core (continuous / anode / aca / pnode / pnode2)
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3, 4, 5))
-def _odeint_cv(f, method, t0, dt, n_steps, policy, u0, theta):
-    u_final, _ = solve_fixed(f, method, u0, theta, t0, dt, n_steps)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3, 4, 5, 6))
+def _odeint_cv(f, method, t0, dt, n_steps, policy, fused, u0, theta):
+    u_final, _ = solve_fixed(f, method, u0, theta, t0, dt, n_steps,
+                             fused=fused)
     return u_final
 
 
-def _odeint_cv_fwd(f, method, t0, dt, n_steps, policy, u0, theta):
+def _odeint_cv_fwd(f, method, t0, dt, n_steps, policy, fused, u0, theta):
     if policy == "continuous":
         u_final, _ = solve_fixed(f, method, u0, theta, t0, dt, n_steps)
         return u_final, (u_final, theta)
@@ -266,16 +357,17 @@ def _odeint_cv_fwd(f, method, t0, dt, n_steps, policy, u0, theta):
         return u_final, (u0, theta)
     if policy == "aca" or policy == "pnode2":
         u_final, saved = solve_fixed(f, method, u0, theta, t0, dt, n_steps,
-                                     save_states=True)
+                                     save_states=True, fused=fused)
         return u_final, (saved["states"], theta)
     if policy == "pnode":
         u_final, saved = solve_fixed(f, method, u0, theta, t0, dt, n_steps,
-                                     save_states=True, save_stages=True)
+                                     save_states=True, save_stages=True,
+                                     fused=fused)
         return u_final, (saved["states"], saved["stages"], theta)
     raise ValueError(policy)
 
 
-def _odeint_cv_bwd(f, method, t0, dt, n_steps, policy, res, g):
+def _odeint_cv_bwd(f, method, t0, dt, n_steps, policy, fused, res, g):
     tab = get_tableau(method)
 
     if policy == "continuous":
@@ -335,7 +427,8 @@ def _odeint_cv_bwd(f, method, t0, dt, n_steps, policy, res, g):
             lam, mu = carry
             u_n, k_n, n = inp
             t_n = _t_of(t0, dt, n)
-            lam, th_bar = rk_adjoint_step(f, tab, u_n, k_n, theta, t_n, dt, lam)
+            lam, th_bar = rk_adjoint_step(f, tab, u_n, k_n, theta, t_n, dt,
+                                          lam, fused=fused)
             return (lam, tree_add(mu, th_bar)), None
 
         (lam, mu), _ = jax.lax.scan(
@@ -350,9 +443,10 @@ def _odeint_cv_bwd(f, method, t0, dt, n_steps, policy, res, g):
             lam, mu = carry
             u_n, n = inp
             t_n = _t_of(t0, dt, n)
-            ks = rk_stages(f, tab, u_n, theta, t_n, dt)  # recompute stages
+            ks = rk_stages(f, tab, u_n, theta, t_n, dt,  # recompute stages
+                           fused=fused)
             lam, th_bar = rk_adjoint_step(f, tab, u_n, tree_stack(ks), theta,
-                                          t_n, dt, lam)
+                                          t_n, dt, lam, fused=fused)
             return (lam, tree_add(mu, th_bar)), None
 
         (lam, mu), _ = jax.lax.scan(
@@ -370,27 +464,30 @@ _odeint_cv.defvjp(_odeint_cv_fwd, _odeint_cv_bwd)
 # revolve policy (binomial checkpointing, trace-time schedule)
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3, 4, 5, 6))
-def _odeint_revolve(f, method, t0, dt, n_steps, ncheck, store, u0, theta):
-    u_final, _ = solve_fixed(f, method, u0, theta, t0, dt, n_steps)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3, 4, 5, 6, 7))
+def _odeint_revolve(f, method, t0, dt, n_steps, ncheck, store, fused, u0,
+                    theta):
+    u_final, _ = solve_fixed(f, method, u0, theta, t0, dt, n_steps,
+                             fused=fused)
     return u_final
 
 
-def _advance_segment(f, tab, u, theta, t_start_idx, n, t0, dt):
+def _advance_segment(f, tab, u, theta, t_start_idx, n, t0, dt, fused=False):
     """Run n plain RK steps from u starting at step index t_start_idx."""
     if n <= 0:
         return u
 
     def body(carry, k):
         t = _t_of(t0, dt, t_start_idx + k)
-        u_next, _ = rk_step(f, tab, carry, theta, t, dt)
+        u_next, _ = rk_step(f, tab, carry, theta, t, dt, fused=fused)
         return u_next, None
 
     u_out, _ = jax.lax.scan(body, u, jnp.arange(n))
     return u_out
 
 
-def _odeint_revolve_fwd(f, method, t0, dt, n_steps, ncheck, store, u0, theta):
+def _odeint_revolve_fwd(f, method, t0, dt, n_steps, ncheck, store, fused, u0,
+                        theta):
     tab = get_tableau(method)
     positions = [0] + revolve_mod.sweep_checkpoint_positions(n_steps, ncheck)
     u = u0
@@ -398,13 +495,15 @@ def _odeint_revolve_fwd(f, method, t0, dt, n_steps, ncheck, store, u0, theta):
     for a, b in zip(bounds[:-1], bounds[1:]):
         # execute step a explicitly to capture its stages for the checkpoint
         t_a = _t_of(t0, dt, a)
-        u_next, stages_a = rk_step(f, tab, u, theta, t_a, dt)
+        u_next, stages_a = rk_step(f, tab, u, theta, t_a, dt, fused=fused)
         store.put(a, (u, stages_a))
-        u = _advance_segment(f, tab, u_next, theta, a + 1, b - a - 1, t0, dt)
+        u = _advance_segment(f, tab, u_next, theta, a + 1, b - a - 1, t0, dt,
+                             fused=fused)
     return u, (store.pack(), theta)
 
 
-def _odeint_revolve_bwd(f, method, t0, dt, n_steps, ncheck, store, res, g):
+def _odeint_revolve_bwd(f, method, t0, dt, n_steps, ncheck, store, fused, res,
+                        g):
     tab = get_tableau(method)
     ckpt_res, theta = res
     positions = [0] + revolve_mod.sweep_checkpoint_positions(n_steps, ncheck)
@@ -418,17 +517,20 @@ def _odeint_revolve_bwd(f, method, t0, dt, n_steps, ncheck, store, res, g):
             _, start, m = act
             u_s, st_s = store.get(start)
             # stage-combine restart: u_{start+1} with zero f evaluations
-            u = rk_combine(tab, u_s, tree_unstack(st_s, tab.num_stages), dt)
-            u = _advance_segment(f, tab, u, theta, start + 1, m - 1, t0, dt)
+            u = rk_combine(tab, u_s, tree_unstack(st_s, tab.num_stages), dt,
+                           fused=fused)
+            u = _advance_segment(f, tab, u, theta, start + 1, m - 1, t0, dt,
+                                 fused=fused)
             t_tgt = _t_of(t0, dt, start + m)
-            _, stages_tgt = rk_step(f, tab, u, theta, t_tgt, dt)
+            _, stages_tgt = rk_step(f, tab, u, theta, t_tgt, dt, fused=fused)
             store.put(start + m, (u, stages_tgt))
         elif kind == "adjoint":
             _, idx = act
             u_i, st_i = store.get(idx)
             store.free(idx)
             t_i = _t_of(t0, dt, idx)
-            lam, th_bar = rk_adjoint_step(f, tab, u_i, st_i, theta, t_i, dt, lam)
+            lam, th_bar = rk_adjoint_step(f, tab, u_i, st_i, theta, t_i, dt,
+                                          lam, fused=fused)
             mu = tree_add(mu, th_bar)
             # the schedule is unrolled at trace time; without a barrier XLA
             # may hoist every step's theta-sized stage gradients and keep
@@ -463,9 +565,11 @@ _odeint_revolve.defvjp(_odeint_revolve_fwd, _odeint_revolve_bwd)
 # step per segment).  This is the production default for LM-scale training.
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3, 4, 5, 6))
-def _odeint_revolve2(f, method, t0, dt, n_steps, ncheck, store, u0, theta):
-    u_final, _ = solve_fixed(f, method, u0, theta, t0, dt, n_steps)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3, 4, 5, 6, 7))
+def _odeint_revolve2(f, method, t0, dt, n_steps, ncheck, store, fused, u0,
+                     theta):
+    u_final, _ = solve_fixed(f, method, u0, theta, t0, dt, n_steps,
+                             fused=fused)
     return u_final
 
 
@@ -474,18 +578,19 @@ def _segment_bounds(n_steps: int, ncheck: int):
     return list(zip(positions, positions[1:] + [n_steps]))
 
 
-def _odeint_revolve2_fwd(f, method, t0, dt, n_steps, ncheck, store, u0,
+def _odeint_revolve2_fwd(f, method, t0, dt, n_steps, ncheck, store, fused, u0,
                          theta):
     bounds = _segment_bounds(n_steps, ncheck)
     u = u0
     for a, b in bounds:
         store.put(a, u)
         u = _advance_segment(f, get_tableau(method), u, theta, a, b - a,
-                             t0, dt)
+                             t0, dt, fused=fused)
     return u, (store.pack(), theta)
 
 
-def _odeint_revolve2_bwd(f, method, t0, dt, n_steps, ncheck, store, res, g):
+def _odeint_revolve2_bwd(f, method, t0, dt, n_steps, ncheck, store, fused,
+                         res, g):
     tab = get_tableau(method)
     ckpt_res, theta = res
     bounds = _segment_bounds(n_steps, ncheck)
@@ -499,14 +604,15 @@ def _odeint_revolve2_bwd(f, method, t0, dt, n_steps, ncheck, store, res, g):
         store.free(a)
         # re-advance the segment, saving states and stages (scan)
         _, saved = solve_fixed(f, method, u_a, theta, t0 + dt * a, dt, m,
-                               save_states=True, save_stages=True)
+                               save_states=True, save_stages=True,
+                               fused=fused)
 
         def body(carry, inp):
             lam_, mu_ = carry
             u_n, k_n, n = inp
             t_n = t0 + dt * (a + n)
             lam_, th_bar = rk_adjoint_step(f, tab, u_n, k_n, theta, t_n, dt,
-                                           lam_)
+                                           lam_, fused=fused)
             return (lam_, tree_add(mu_, th_bar)), None
 
         (lam, mu), _ = jax.lax.scan(
@@ -519,48 +625,95 @@ _odeint_revolve2.defvjp(_odeint_revolve2_fwd, _odeint_revolve2_bwd)
 
 
 # ---------------------------------------------------------------------------
-# pnode with spill offload: the scanned forward sweep streams every step's
-# (state, stages) checkpoint into the host-side store instead of stacking
-# them in device residual buffers; the reverse scan streams them back.  The
-# residual is a single token scalar, so compiled device-live memory is O(1)
-# state copies regardless of N_t while the adjoint math — and therefore the
+# pnode with spill offload: the scanned forward sweep streams (state, stages)
+# checkpoints into the host-side store instead of stacking them in device
+# residual buffers; the reverse scan streams them back.  The residual is a
+# single token scalar, so compiled device-live memory is O(segment) state
+# copies regardless of N_t while the adjoint math — and therefore the
 # gradients, bitwise — is exactly pnode's (tests/test_mem.py).
+#
+# I/O is SEGMENT-BATCHED: an inner scan stages `segment` consecutive steps'
+# checkpoints in a small device buffer, then one `write_batch` callback
+# ships the whole segment; the reverse sweep mirrors it with one `prefetch`
+# callback per segment.  Host round-trips per reverse pass drop from
+# 2*N_t to 2*ceil(N_t/segment) (BENCH_3), at a device cost of
+# segment*(N_s+1) staged state vectors — sublinear with the default
+# segment = ceil(sqrt(N_t)) (repro.mem.offload.default_segment).
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3, 4, 5))
-def _odeint_pnode_spill(f, method, t0, dt, n_steps, store, u0, theta):
-    u_final, _ = solve_fixed(f, method, u0, theta, t0, dt, n_steps)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3, 4, 5, 6, 7))
+def _odeint_pnode_spill(f, method, t0, dt, n_steps, store, segment, fused,
+                        u0, theta):
+    u_final, _ = solve_fixed(f, method, u0, theta, t0, dt, n_steps,
+                             fused=fused)
     return u_final
 
 
-def _odeint_pnode_spill_fwd(f, method, t0, dt, n_steps, store, u0, theta):
+def _odeint_pnode_spill_fwd(f, method, t0, dt, n_steps, store, segment,
+                            fused, u0, theta):
     tab = get_tableau(method)
+    n_full, rem = divmod(n_steps, segment)
 
-    def body(carry, n):
-        u, tok = carry
-        t = t0 + n.astype(jnp.result_type(float)) * dt  # match solve_fixed
-        u_next, stages = rk_step(f, tab, u, theta, t, dt)
-        tok = store.write_at(tok, n, (u, stages))
-        return (u_next, tok), None
+    def run_segment(u, tok, base, m):
+        # base: first step index of the segment (traced or static); m static
+        def step(carry, i):
+            u = carry
+            n = base + i
+            t = t0 + n.astype(jnp.result_type(float)) * dt  # = solve_fixed
+            u_next, stages = rk_step(f, tab, u, theta, t, dt, fused=fused)
+            return u_next, (u, stages)
 
-    (u_final, tok), _ = jax.lax.scan(body, (u0, store.init_token()),
-                                     jnp.arange(n_steps))
-    return u_final, (tok, theta)
+        u, staged = jax.lax.scan(step, u, jnp.arange(m))
+        tok = store.write_batch(tok, base, staged)  # ONE callback, m slots
+        return u, tok
+
+    u, tok = u0, store.init_token()
+    if n_full:
+        def seg_body(carry, s_idx):
+            u, tok = carry
+            u, tok = run_segment(u, tok, s_idx * segment, segment)
+            return (u, tok), None
+
+        (u, tok), _ = jax.lax.scan(seg_body, (u, tok), jnp.arange(n_full))
+    if rem:
+        u, tok = run_segment(u, tok, jnp.asarray(n_full * segment), rem)
+    return u, (tok, theta)
 
 
-def _odeint_pnode_spill_bwd(f, method, t0, dt, n_steps, store, res, g):
+def _odeint_pnode_spill_bwd(f, method, t0, dt, n_steps, store, segment,
+                            fused, res, g):
     tab = get_tableau(method)
     tok, theta = res
+    n_full, rem = divmod(n_steps, segment)
 
-    def body(carry, n):
-        lam, mu = carry
-        u_n, k_n = store.read_at(tok, n)
-        t_n = _t_of(t0, dt, n)
-        lam, th_bar = rk_adjoint_step(f, tab, u_n, k_n, theta, t_n, dt, lam)
-        return (lam, tree_add(mu, th_bar)), None
+    def run_segment_bwd(lam, mu, tok, base, m):
+        tok, staged = store.prefetch(tok, base, m)  # ONE callback, m slots
 
-    (lam, mu), _ = jax.lax.scan(
-        body, (g, tree_zeros_like(theta)), jnp.arange(n_steps), reverse=True)
+        def step(carry, i):
+            lam, mu = carry
+            u_n, k_n = jtu.tree_map(lambda b: b[i], staged)
+            t_n = _t_of(t0, dt, base + i)
+            lam, th_bar = rk_adjoint_step(f, tab, u_n, k_n, theta, t_n, dt,
+                                          lam, fused=fused)
+            return (lam, tree_add(mu, th_bar)), None
+
+        (lam, mu), _ = jax.lax.scan(step, (lam, mu), jnp.arange(m),
+                                    reverse=True)
+        return lam, mu, tok
+
+    lam, mu = g, tree_zeros_like(theta)
+    if rem:  # the trailing partial segment is adjointed first
+        lam, mu, tok = run_segment_bwd(lam, mu, tok,
+                                       jnp.asarray(n_full * segment), rem)
+    if n_full:
+        def seg_body(carry, s_idx):
+            lam, mu, tok = carry
+            lam, mu, tok = run_segment_bwd(lam, mu, tok, s_idx * segment,
+                                           segment)
+            return (lam, mu, tok), None
+
+        (lam, mu, tok), _ = jax.lax.scan(seg_body, (lam, mu, tok),
+                                         jnp.arange(n_full), reverse=True)
     return lam, mu
 
 
@@ -575,7 +728,8 @@ def odeint_with_quadrature(f: VectorField, q, u0: PyTree, theta: PyTree, *,
                            dt: float, n_steps: int, t0: float = 0.0,
                            method: str = "rk4", adjoint: str = "pnode",
                            ncheck: int | None = None,
-                           offload: str | None = None):
+                           offload: str | None = None,
+                           fused_stages: bool = False):
     """Integrate du/dt = f AND the loss quadrature dQ/dt = q(u, theta, t)
     jointly (eq. 2's integral term: running costs / Tikhonov / kinetic
     regularizers a la Finlay et al.).  Returns (u_final, Q).
@@ -590,5 +744,5 @@ def odeint_with_quadrature(f: VectorField, q, u0: PyTree, theta: PyTree, *,
     q0 = jnp.zeros((), jnp.result_type(float))
     u_final, Q = odeint(aug, (u0, q0), theta, dt=dt, n_steps=n_steps, t0=t0,
                         method=method, adjoint=adjoint, ncheck=ncheck,
-                        offload=offload)
+                        offload=offload, fused_stages=fused_stages)
     return u_final, Q

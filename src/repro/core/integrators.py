@@ -66,6 +66,41 @@ def tree_lincomb(coeffs, trees) -> PyTree:
     return acc
 
 
+def tree_stage_lincomb(base: PyTree, pairs, scale=None,
+                       base_coeff: float | None = None,
+                       fused: bool = False) -> PyTree:
+    """``base_coeff*base + sum (scale*w_i) * tree_i`` over (w_i, tree_i)
+    ``pairs`` — the RK stage-update / stage-adjoint primitive.
+
+    ``fused=False`` is the seed path: one ``tree_axpy`` per pair, exactly
+    the historical accumulation order.  ``fused=True`` lowers the whole
+    combination to ONE Pallas kernel per leaf (``kernels.ops.fused_lincomb``,
+    interpret-mode on CPU) with the same accumulation order inside the
+    kernel, so results are bitwise-identical under jit.  Callers must
+    already have dropped zero-weight pairs (both paths assume it).
+    """
+    if not fused:
+        out = base if base_coeff is None else tree_scale(base_coeff, base)
+        for w, tr in pairs:
+            out = tree_axpy(w if scale is None else scale * w, tr, out)
+        return out
+    from repro.kernels.ops import fused_lincomb  # deferred: keep core light
+    weights = [w for w, _ in pairs]
+    terms = [t for _, t in pairs]
+    if not terms:
+        return base if base_coeff is None else tree_scale(base_coeff, base)
+
+    def leaf(b, *ts):
+        if b.size == 0:  # degenerate leaf: nothing to fuse
+            out = b if base_coeff is None else base_coeff * b
+            for w, t in zip(weights, ts):
+                out = out + (w if scale is None else scale * w) * t
+            return out
+        return fused_lincomb(b, ts, weights, scale, base_coeff)
+
+    return jtu.tree_map(leaf, base, *terms)
+
+
 def tree_stack(trees) -> PyTree:
     return jtu.tree_map(lambda *xs: jnp.stack(xs), *trees)
 
@@ -92,56 +127,52 @@ def tree_cast(a: PyTree, dtype) -> PyTree:
 # ---------------------------------------------------------------------------
 
 def rk_stages(f: VectorField, tab: ButcherTableau, u: PyTree, theta: PyTree,
-              t, h) -> list:
-    """Compute the stage derivatives k_1..k_s (list of pytrees)."""
+              t, h, fused: bool = False) -> list:
+    """Compute the stage derivatives k_1..k_s (list of pytrees).
+    ``fused=True`` builds each stage input with one Pallas lincomb kernel
+    per leaf instead of a tree_axpy chain (bitwise-identical under jit)."""
     ks: list = []
     for i in range(tab.num_stages):
-        xi = u
-        for j in range(i):
-            aij = float(tab.a[i, j])
-            if aij != 0.0:
-                xi = tree_axpy(h * aij, ks[j], xi)
+        pairs = [(float(tab.a[i, j]), ks[j]) for j in range(i)
+                 if float(tab.a[i, j]) != 0.0]
+        xi = tree_stage_lincomb(u, pairs, scale=h, fused=fused)
         ks.append(f(xi, theta, t + float(tab.c[i]) * h))
     return ks
 
 
-def rk_combine(tab: ButcherTableau, u: PyTree, ks, h) -> PyTree:
+def rk_combine(tab: ButcherTableau, u: PyTree, ks, h,
+               fused: bool = False) -> PyTree:
     """u + h * sum_i b_i k_i."""
-    out = u
-    for i in range(tab.num_stages):
-        bi = float(tab.b[i])
-        if bi != 0.0:
-            out = tree_axpy(h * bi, ks[i], out)
-    return out
+    pairs = [(float(tab.b[i]), ks[i]) for i in range(tab.num_stages)
+             if float(tab.b[i]) != 0.0]
+    return tree_stage_lincomb(u, pairs, scale=h, fused=fused)
 
 
 def rk_step(f: VectorField, tab: ButcherTableau, u: PyTree, theta: PyTree,
-            t, h) -> Tuple[PyTree, PyTree]:
+            t, h, fused: bool = False) -> Tuple[PyTree, PyTree]:
     """One explicit RK step.  Returns (u_next, stages) with stages stacked
     along a new leading axis of size N_s (so it scans cleanly)."""
-    ks = rk_stages(f, tab, u, theta, t, h)
-    u_next = rk_combine(tab, u, ks, h)
+    ks = rk_stages(f, tab, u, theta, t, h, fused=fused)
+    u_next = rk_combine(tab, u, ks, h, fused=fused)
     return u_next, tree_stack(ks)
 
 
-def rk_stage_inputs(tab: ButcherTableau, u: PyTree, stages: PyTree, h) -> list:
+def rk_stage_inputs(tab: ButcherTableau, u: PyTree, stages: PyTree, h,
+                    fused: bool = False) -> list:
     """Reconstruct the stage inputs x_i = u + h*sum_j a_ij k_j from stored
     stage derivatives — no f evaluations (the PNODE trick)."""
     ks = tree_unstack(stages, tab.num_stages)
     xs = []
     for i in range(tab.num_stages):
-        xi = u
-        for j in range(i):
-            aij = float(tab.a[i, j])
-            if aij != 0.0:
-                xi = tree_axpy(h * aij, ks[j], xi)
-        xs.append(xi)
+        pairs = [(float(tab.a[i, j]), ks[j]) for j in range(i)
+                 if float(tab.a[i, j]) != 0.0]
+        xs.append(tree_stage_lincomb(u, pairs, scale=h, fused=fused))
     return xs
 
 
 def rk_adjoint_step(f: VectorField, tab: ButcherTableau, u: PyTree,
                     stages: PyTree, theta: PyTree, t, h,
-                    lam: PyTree) -> Tuple[PyTree, PyTree]:
+                    lam: PyTree, fused: bool = False) -> Tuple[PyTree, PyTree]:
     """Discrete adjoint of one explicit RK step (the paper's eq. 7).
 
     Given the step's initial state ``u``, its stored stage derivatives, and
@@ -157,21 +188,20 @@ def rk_adjoint_step(f: VectorField, tab: ButcherTableau, u: PyTree,
         theta_bar = sum_i g_i
     """
     s = tab.num_stages
-    xs = rk_stage_inputs(tab, u, stages, h)
+    xs = rk_stage_inputs(tab, u, stages, h, fused=fused)
     ws: list = [None] * s
     lam_prev = lam
     theta_bar = None
     for i in reversed(range(s)):
-        vi = tree_scale(float(tab.b[i]), lam)
-        for j in range(i + 1, s):
-            aji = float(tab.a[j, i])
-            if aji != 0.0 and ws[j] is not None:
-                vi = tree_axpy(aji, ws[j], vi)
         if float(tab.b[i]) == 0.0 and all(
             float(tab.a[j, i]) == 0.0 for j in range(i + 1, s)
         ):
             ws[i] = None
             continue
+        pairs = [(float(tab.a[j, i]), ws[j]) for j in range(i + 1, s)
+                 if float(tab.a[j, i]) != 0.0 and ws[j] is not None]
+        vi = tree_stage_lincomb(lam, pairs, base_coeff=float(tab.b[i]),
+                                fused=fused)
         ti = t + float(tab.c[i]) * h
         _, vjp_fn = jax.vjp(lambda uu, th: f(uu, th, ti), xs[i], theta)
         wi, gi = vjp_fn(tree_scale(h, vi))
@@ -190,7 +220,8 @@ def rk_adjoint_step(f: VectorField, tab: ButcherTableau, u: PyTree,
 def solve_fixed(f: VectorField, method: str, u0: PyTree, theta: PyTree,
                 t0: float, h: float, n_steps: int,
                 save_states: bool = False,
-                save_stages: bool = False):
+                save_stages: bool = False,
+                fused: bool = False):
     """Integrate n_steps of size h with a fixed-step explicit RK method.
 
     Returns (u_final, saved) where ``saved`` is a dict possibly containing
@@ -202,7 +233,7 @@ def solve_fixed(f: VectorField, method: str, u0: PyTree, theta: PyTree,
     def body(carry, n):
         u = carry
         t = t0 + n.astype(jnp.result_type(float)) * h
-        u_next, stages = rk_step(f, tab, u, theta, t, h)
+        u_next, stages = rk_step(f, tab, u, theta, t, h, fused=fused)
         out = {}
         if save_states:
             out["states"] = u

@@ -1,13 +1,105 @@
-"""jit'd public wrappers for the Pallas kernels (model-facing layouts)."""
+"""jit'd public wrappers for the Pallas kernels (model-facing layouts) plus
+the fused RK stage-combine kernel used by the adjoint hot path.
+
+Note (interpret-mode CPU caveat, same as flash_attention/rwkv6): on
+non-TPU backends every kernel here runs through the Pallas interpreter, so
+the fusion is semantic (one kernel call, one output buffer, accumulation
+order fixed inside the kernel) rather than a measured VMEM win; real-TPU
+validation is an open ROADMAP item.
+"""
 from __future__ import annotations
 
 import functools
 
 import jax
 import jax.numpy as jnp
+from jax.experimental import pallas as pl
 
 from repro.kernels.flash_attention import flash_attention_bhsd
 from repro.kernels.rwkv6_scan import rwkv6_chunked_bhsd
+
+
+# ---------------------------------------------------------------------------
+# fused linear combination (the RK stage-update / stage-adjoint primitive)
+#
+# Every hot operation of the discrete adjoint is the same shape of math:
+#
+#   forward stage inputs   x_i = u + h * sum_j a_ij k_j
+#   forward combine        u'  = u + h * sum_i b_i  k_i
+#   adjoint stage weights  v_i = b_i * lam + sum_{j>i} a_ji w_j
+#
+# i.e. out = (base_coeff * base) + sum_i c_i * term_i with trace-time
+# tableau weights.  Unfused, each term lowers to a separate mul+add pair
+# with its own output buffer; this kernel emits ONE pallas_call per pytree
+# leaf with the whole accumulation inside, in the exact order the unfused
+# ``tree_axpy`` chain uses — so results (and therefore the adjoint's
+# gradients) are bitwise-identical to the unfused path when both run under
+# jit (XLA's FMA contraction is consistent within a compiled program).
+# ---------------------------------------------------------------------------
+
+
+def _lincomb_kernel_static(*refs, coeffs, base_coeff):
+    """out = base_coeff*base + sum_i coeffs[i]*terms[i]; coeffs are
+    trace-time Python floats (fixed-step path: h folded into coeffs)."""
+    base_ref = refs[0]
+    out_ref = refs[-1]
+    term_refs = refs[1:-1]
+    acc = base_ref[...]
+    if base_coeff is not None:
+        acc = base_coeff * acc
+    for c, r in zip(coeffs, term_refs):
+        acc = acc + c * r[...]
+    out_ref[...] = acc
+
+
+def _lincomb_kernel_scaled(*refs, weights, base_coeff):
+    """Like _lincomb_kernel_static but the per-term coefficient is
+    h * weights[i] with h a traced scalar operand (adaptive-step path) —
+    computed inside the kernel in the same order the unfused chain uses."""
+    base_ref, h_ref = refs[0], refs[1]
+    out_ref = refs[-1]
+    term_refs = refs[2:-1]
+    h = h_ref[0]
+    acc = base_ref[...]
+    if base_coeff is not None:
+        acc = base_coeff * acc
+    for w, r in zip(weights, term_refs):
+        acc = acc + (h * w) * r[...]
+    out_ref[...] = acc
+
+
+def fused_lincomb(base: jax.Array, terms, weights, scale=None,
+                  base_coeff: float | None = None, *,
+                  interpret: bool | None = None) -> jax.Array:
+    """One-kernel ``base_coeff*base + sum_i (scale*weights[i]) * terms[i]``.
+
+    ``weights`` are trace-time floats (Butcher-tableau entries); ``scale``
+    is the step size h — a Python float (fixed-step: folded into the
+    coefficients at trace time) or a traced scalar (adaptive: passed as a
+    kernel operand).  ``base_coeff=None`` means the base enters unscaled
+    (the RK state-update form); a float (including 0.0) multiplies it
+    first (the adjoint ``v_i = b_i*lam + ...`` form).  Zero weights must be
+    dropped by the caller (to mirror the unfused chain's trace-time skip).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    shape = base.shape
+    flat = base.reshape(-1)  # interpret-mode pallas wants >= 1-D operands
+    fterms = [t.reshape(-1) for t in terms]
+    out_sds = jax.ShapeDtypeStruct(flat.shape, flat.dtype)
+    if scale is None or isinstance(scale, (int, float)):
+        coeffs = [w if scale is None else float(scale) * w for w in weights]
+        kern = functools.partial(_lincomb_kernel_static, coeffs=coeffs,
+                                 base_coeff=base_coeff)
+        out = pl.pallas_call(kern, out_shape=out_sds,
+                             interpret=interpret)(flat, *fterms)
+    else:
+        kern = functools.partial(_lincomb_kernel_scaled, weights=list(weights),
+                                 base_coeff=base_coeff)
+        h_op = jnp.asarray(scale, flat.dtype).reshape(1)
+        out = pl.pallas_call(kern, out_shape=out_sds,
+                             interpret=interpret)(flat, h_op, *fterms)
+    return out.reshape(shape)
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",

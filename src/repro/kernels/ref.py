@@ -29,6 +29,16 @@ def attention_ref(q, k, v, *, causal=True, window=0):
     return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)
 
 
+def lincomb_ref(base, terms, weights, scale=None, base_coeff=None):
+    """Oracle for kernels.ops.fused_lincomb: the exact unfused tree_axpy
+    accumulation order (base first, then terms left to right)."""
+    acc = base if base_coeff is None else base_coeff * base
+    for w, t in zip(weights, terms):
+        c = w if scale is None else scale * w
+        acc = acc + c * t
+    return acc
+
+
 def rwkv6_ref(r, k, v, logw, u):
     """Sequential RWKV6 recurrence oracle.
     r/k/v/logw: (B,H,S,dh); u: (H,dh).  Returns (out, final state)."""

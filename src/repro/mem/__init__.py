@@ -13,16 +13,19 @@ Prop. 2); this package makes the tuning automatic:
 """
 from repro.mem.model import (CostEstimate, f_activation_bytes,
                              max_fitting_ncheck, measure_reverse_cost,
-                             policy_cost, tree_bytes)
+                             policy_cost, spill_callback_counts, tree_bytes)
 from repro.mem.offload import (CheckpointStore, DeviceStore, HostStore,
-                               SpillStore, host_memory_kind, make_store)
+                               SpillStore, default_segment,
+                               host_memory_kind, make_store,
+                               reset_spill_stats, spill_stats)
 from repro.mem.planner import (Plan, candidate_costs, plan_depth_remat,
                                plan_odeint)
 
 __all__ = [
     "CostEstimate", "policy_cost", "tree_bytes", "f_activation_bytes",
-    "max_fitting_ncheck", "measure_reverse_cost",
+    "max_fitting_ncheck", "measure_reverse_cost", "spill_callback_counts",
     "CheckpointStore", "DeviceStore", "HostStore", "SpillStore",
-    "make_store", "host_memory_kind",
+    "make_store", "host_memory_kind", "default_segment",
+    "reset_spill_stats", "spill_stats",
     "Plan", "plan_odeint", "candidate_costs", "plan_depth_remat",
 ]

@@ -92,20 +92,54 @@ class CostEstimate:
     work_bytes: int        # transient working set of one reverse step
     extra_fevals: int      # NFE-B: reverse-pass f evaluations
     reverse_accurate: bool
+    host_callbacks: int = 0  # host round-trips per reverse pass (spill tier)
 
     @property
     def peak_bytes(self) -> int:
         """Predicted device-live peak: offloaded ckpt storage leaves the
-        device, everything else stays."""
+        device, everything else stays (including, for the spill tier, the
+        segment staging buffer folded into work_bytes)."""
         if self.offload in ("host", "spill"):
             return self.work_bytes
         return self.ckpt_bytes + self.work_bytes
 
 
+def spill_callback_counts(policy: str, n_steps: int, *,
+                          ncheck: Optional[int] = None,
+                          segment: Optional[int] = None) -> Dict[str, int]:
+    """Host callbacks one reverse pass issues on the spill tier (the
+    batched-I/O reality the planner ranks against; BENCH_3 measures it).
+
+    pnode's scanned sweeps batch ``segment`` checkpoints per callback
+    (fwd ``write_batch`` + bwd ``prefetch``); the revolve policies are
+    slot-addressed at trace time and already pay one callback per
+    checkpoint-schedule action (puts/gets/frees).
+    """
+    from repro.core import revolve as revolve_mod  # late: import cycle
+    from repro.mem.offload import default_segment
+    if policy == "pnode":
+        seg = min(segment or default_segment(n_steps), n_steps)
+        n_segments = -(-n_steps // seg)
+        return {"forward": n_segments, "backward": n_segments,
+                "total": 2 * n_segments}
+    if policy == "revolve":
+        fwd = ncheck + 1  # one put per sweep checkpoint
+        bwd = 0
+        for act in revolve_mod.reverse_schedule(n_steps, ncheck):
+            bwd += {"advance": 2, "adjoint": 2, "free": 1}[act[0]]
+        return {"forward": fwd, "backward": bwd, "total": fwd + bwd}
+    if policy == "revolve2":
+        from repro.core.adjoint import _segment_bounds
+        nb = len(_segment_bounds(n_steps, ncheck))
+        return {"forward": nb, "backward": 2 * nb, "total": 3 * nb}
+    return {"forward": 0, "backward": 0, "total": 0}
+
+
 def policy_cost(policy: str, *, method: str, n_steps: int, state_bytes: int,
                 theta_bytes: int = 0, f_act_bytes: Optional[int] = None,
                 ncheck: Optional[int] = None,
-                offload: Optional[str] = None) -> CostEstimate:
+                offload: Optional[str] = None,
+                segment: Optional[int] = None) -> CostEstimate:
     """Analytic (peak bytes, extra f-evals) for one policy instance."""
     tab = get_tableau(method)
     s = tab.num_stages
@@ -125,10 +159,21 @@ def policy_cost(policy: str, *, method: str, n_steps: int, state_bytes: int,
                                  state_bytes, ncheck=ncheck)
     extra = nfe_backward(method, n_steps, policy,
                          ncheck=ncheck) if policy != "naive" else 0
+    callbacks = 0
+    if offload == "spill":
+        callbacks = spill_callback_counts(policy, n_steps, ncheck=ncheck,
+                                          segment=segment)["total"]
+        if policy == "pnode":
+            # segment staging buffer: the batched sweeps hold one segment
+            # of (state, stages) checkpoints on device between callbacks
+            from repro.mem.offload import default_segment
+            seg = min(segment or default_segment(n_steps), n_steps)
+            work += seg * (s + 1) * state_bytes
     return CostEstimate(policy=policy, ncheck=ncheck, offload=offload,
                         ckpt_bytes=int(ckpt), work_bytes=int(work),
                         extra_fevals=int(extra),
-                        reverse_accurate=policy in REVERSE_ACCURATE)
+                        reverse_accurate=policy in REVERSE_ACCURATE,
+                        host_callbacks=int(callbacks))
 
 
 def max_fitting_ncheck(budget: int, *, method: str, n_steps: int,
@@ -167,9 +212,11 @@ def measure_reverse_cost(f: Callable, u0: PyTree, theta: PyTree, *,
                          dt: float, n_steps: int, t0: float = 0.0,
                          method: str = "rk4", policy: str = "pnode",
                          ncheck: Optional[int] = None,
-                         offload: Optional[str] = None) -> Dict[str, float]:
-    """Lower + compile the reverse pass (grad of a canonical scalar loss of
-    the solve) and measure its peak bytes two ways:
+                         offload: Optional[str] = None,
+                         loss_fn: Optional[Callable] = None
+                         ) -> Dict[str, float]:
+    """Lower + compile the reverse pass (grad of a scalar loss of the
+    solve) and measure its peak bytes two ways:
 
       hlo_peak_bytes  liveness sweep over the optimized HLO text
                       (``launch.hlo_cost.peak_live_bytes``) — the metric the
@@ -178,15 +225,21 @@ def measure_reverse_cost(f: Callable, u0: PyTree, theta: PyTree, *,
       argument_bytes  (``compiled.memory_analysis()``), kept as a
                       cross-check column in the benchmarks.
 
-    Results are cached on (f identity, arg structure, solve configuration):
-    a planner verify step compiles each candidate at most once per session.
+    ``loss_fn(u_final) -> scalar`` measures the reverse pass of the
+    CALLER'S loss (the planner forwards it from ``plan_odeint``) so the
+    budget check sees the real training objective's working set; the
+    default is the canonical sum-of-squares surrogate.
+
+    Results are cached on (f identity, loss_fn identity, arg structure,
+    solve configuration): a planner verify step compiles each candidate at
+    most once per session.
     """
     from repro.core.adjoint import odeint  # late: avoid import cycle
     from repro.launch.hlo_cost import peak_live_bytes
 
-    key = (id(f), _struct_key(u0), _struct_key(theta), float(dt),
-           int(n_steps), float(t0), method, policy, ncheck, offload,
-           bool(jax.config.jax_enable_x64))
+    key = (id(f), None if loss_fn is None else id(loss_fn), _struct_key(u0),
+           _struct_key(theta), float(dt), int(n_steps), float(t0), method,
+           policy, ncheck, offload, bool(jax.config.jax_enable_x64))
     hit = _MEASURE_CACHE.get(key)
     if hit is not None:
         return hit[1]
@@ -195,6 +248,8 @@ def measure_reverse_cost(f: Callable, u0: PyTree, theta: PyTree, *,
         uf = odeint(f, u0_, th_, dt=dt, n_steps=n_steps, t0=t0,
                     method=method, adjoint=policy, ncheck=ncheck,
                     offload=offload)
+        if loss_fn is not None:
+            return loss_fn(uf)
         return sum(jnp.sum(x * x) for x in jtu.tree_leaves(uf))
 
     grad_fn = jax.grad(loss, argnums=(0, 1))
@@ -207,7 +262,8 @@ def measure_reverse_cost(f: Callable, u0: PyTree, theta: PyTree, *,
         "argument_bytes": float(getattr(mem, "argument_size_in_bytes", -1.0))
         if mem is not None else -1.0,
     }
-    # the entry keeps a strong reference to f: id(f) keys would otherwise
-    # be reusable after garbage collection and alias a different function
-    _MEASURE_CACHE[key] = (f, out)
+    # the entry keeps strong references to f / loss_fn: id() keys would
+    # otherwise be reusable after garbage collection and alias different
+    # functions
+    _MEASURE_CACHE[key] = ((f, loss_fn), out)
     return out

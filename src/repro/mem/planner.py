@@ -87,8 +87,16 @@ def candidate_costs(*, method: str, n_steps: int, state_bytes: int,
 def plan_odeint(f: Callable, u0: PyTree, theta: PyTree, *, dt: float,
                 n_steps: int, t0: float = 0.0, method: str = "rk4",
                 mem_budget: Optional[int] = None,
-                verify: str = "measure") -> Plan:
-    """Pick (policy, ncheck, offload) for one odeint call under a budget."""
+                verify: str = "measure",
+                loss_fn: Optional[Callable] = None) -> Plan:
+    """Pick (policy, ncheck, offload) for one odeint call under a budget.
+
+    ``loss_fn(u_final) -> scalar``: in ``verify="measure"`` mode the
+    measured reverse pass is the gradient of THIS loss (the caller's
+    training objective), so the budget check covers the loss's own working
+    set too; when omitted the canonical sum-of-squares surrogate is
+    measured (the pre-existing behavior).  Ignored in ``verify="model"``.
+    """
     if mem_budget is None:
         # no constraint: the paper's method — no recompute beyond the
         # per-stage linearizations, bounded graph depth
@@ -113,7 +121,7 @@ def plan_odeint(f: Callable, u0: PyTree, theta: PyTree, *, dt: float,
         if verify == "measure":
             m = measure_reverse_cost(
                 f, u0, theta, dt=dt, n_steps=n_steps, t0=t0, method=method,
-                policy=cand.policy, ncheck=cand.ncheck)["hlo_peak_bytes"]
+                policy=cand.policy, ncheck=cand.ncheck, loss_fn=loss_fn)["hlo_peak_bytes"]
             if m > mem_budget:
                 continue
             measured = m
@@ -126,7 +134,7 @@ def plan_odeint(f: Callable, u0: PyTree, theta: PyTree, *, dt: float,
         for cand in cands:
             m = measure_reverse_cost(
                 f, u0, theta, dt=dt, n_steps=n_steps, t0=t0, method=method,
-                policy=cand.policy, ncheck=cand.ncheck)["hlo_peak_bytes"]
+                policy=cand.policy, ncheck=cand.ncheck, loss_fn=loss_fn)["hlo_peak_bytes"]
             if m <= mem_budget:
                 return Plan(cand.policy, cand.ncheck, None, cand,
                             mem_budget, True, m, tuple(cands))
@@ -141,7 +149,8 @@ def plan_odeint(f: Callable, u0: PyTree, theta: PyTree, *, dt: float,
     if verify == "measure":
         measured = measure_reverse_cost(
             f, u0, theta, dt=dt, n_steps=n_steps, t0=t0, method=method,
-            policy="pnode", offload="spill")["hlo_peak_bytes"]
+            policy="pnode", offload="spill",
+            loss_fn=loss_fn)["hlo_peak_bytes"]
         fits = measured <= mem_budget
     return Plan("pnode", None, "spill", est, mem_budget, fits, measured,
                 tuple(cands))
