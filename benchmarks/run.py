@@ -3,11 +3,12 @@
   PYTHONPATH=src python -m benchmarks.run            # quick versions
   PYTHONPATH=src python -m benchmarks.run --full     # full sweeps
   PYTHONPATH=src python -m benchmarks.run --smoke    # CI: mem_plan +
-                                                    # hotpath; writes
-                                                    # BENCH_2.json and
-                                                    # BENCH_3.json, fails
-                                                    # on host-callback
-                                                    # regressions
+                                                    # hotpath +
+                                                    # stiff_ensemble;
+                                                    # writes BENCH_2/3/4
+                                                    # .json, fails on
+                                                    # host-callback or
+                                                    # NFE-B regressions
 """
 from __future__ import annotations
 
@@ -19,16 +20,17 @@ def main() -> None:
     full = "--full" in sys.argv
 
     if "--smoke" in sys.argv:
-        from benchmarks import hotpath, mem_plan
+        from benchmarks import hotpath, mem_plan, stiff_ensemble
         t0 = time.time()
         mem_plan.main(smoke=True)
         hotpath.main(smoke=True, check=True)
+        stiff_ensemble.main(smoke=True, check=True)
         print(f"\n== bench smoke done in {time.time()-t0:.1f}s ==")
         return
 
     from benchmarks import (adjoint_discrepancy, cnf_tables, fig3_memory,
-                            hotpath, mem_plan, roofline, stiff_table8,
-                            table2_costs)
+                            hotpath, mem_plan, roofline, stiff_ensemble,
+                            stiff_table8, table2_costs)
 
     sections = [
         ("adjoint_discrepancy (Table 1 / Prop 1)",
@@ -40,6 +42,8 @@ def main() -> None:
         ("fig3_memory (Fig 3)", fig3_memory.main),
         ("mem_plan (planner / BENCH_2.json)", mem_plan.main),
         ("hotpath (reverse-pass hot path / BENCH_3.json)", hotpath.main),
+        ("stiff_ensemble (vmapped implicit under budget / BENCH_4.json)",
+         stiff_ensemble.main),
         ("roofline (EXPERIMENTS Roofline)", roofline.main),
     ]
 

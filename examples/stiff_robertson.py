@@ -3,10 +3,17 @@ implicit Crank-Nicolson integrator and its discrete adjoint (the capability
 PNODE uniquely enables) vs adaptive explicit Dopri5.
 
   PYTHONPATH=src python examples/stiff_robertson.py [--epochs 300]
+  PYTHONPATH=src python examples/stiff_robertson.py --mem-budget 400000
 
 Expected: CN trains stably to low loss; Dopri5's gradient norm is orders of
 magnitude larger / the step count explodes as the learned model stiffens
 (paper Fig. 5 and Table 8).
+
+With --mem-budget BYTES the CN solves run through the memory planner
+(`adjoint="auto"`): the chosen checkpoint policy / ncheck / offload tier
+is printed up front, and every training step executes under it.  Budgets
+below the smallest in-device candidate fall back to the callback spill
+tier — gradients stay bitwise-identical, only the checkpoint bytes move.
 """
 import argparse
 import time
@@ -53,6 +60,10 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--epochs", type=int, default=200)
     ap.add_argument("--hidden", type=int, default=32)
+    ap.add_argument("--mem-budget", type=int, default=None,
+                    help="device-byte budget for the CN adjoint; routes "
+                         "each solve through plan_odeint via "
+                         "odeint_implicit(adjoint='auto')")
     args = ap.parse_args()
 
     ts, y = robertson_truth(20)
@@ -68,16 +79,28 @@ def main():
 
     n_obs = len(ts)
 
+    cn_kw = dict(method="cn", newton_iters=6, gmres_iters=10)
+    if args.mem_budget is not None:
+        from repro.mem.planner import plan_odeint
+        plan = plan_odeint(mlp_vf, y0, theta, dt=0.5, n_steps=2,
+                           method="cn", mem_budget=args.mem_budget,
+                           verify="model",
+                           solver_opts=dict(newton_iters=6, gmres_iters=10))
+        print(f"planner @ {args.mem_budget} bytes: policy={plan.policy} "
+              f"ncheck={plan.ncheck} offload={plan.offload} "
+              f"predicted_peak={plan.predicted.peak_bytes}B "
+              f"NFE-B={plan.extra_fevals} fits={plan.fits}")
+        cn_kw.update(adjoint="auto", mem_budget=args.mem_budget,
+                     mem_verify="model")
+
     def loss_cn(theta):
         # fixed-step CN over the scaled pseudo-time horizon, matching the
         # n_obs observation points
-        from repro.core.integrators import PyTree
         us = []
         u = y0
         for k in range(n_obs - 1):
             u = odeint_implicit(mlp_vf, u, theta, dt=0.5, n_steps=2,
-                                t0=float(k), method="cn", newton_iters=6,
-                                gmres_iters=10)
+                                t0=float(k), **cn_kw)
             us.append(u)
         pred = jnp.stack([y0] + us)
         return jnp.mean(jnp.abs(pred - target))          # MAE (paper eq. 15)

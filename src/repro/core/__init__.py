@@ -3,7 +3,11 @@ from repro.core.adjoint import (POLICIES, checkpoint_floats, nfe_backward,
                                 nfe_forward, odeint)
 from repro.core.adaptive import AdaptiveInfo, odeint_adaptive
 from repro.core.depth_ode import ODEBlock, checkpointed_scan
-from repro.core.implicit import implicit_step, odeint_implicit
+from repro.core.implicit import (IMPLICIT_METHODS, IMPLICIT_POLICIES,
+                                 ImplicitStats, implicit_checkpoint_floats,
+                                 implicit_nfe_backward, implicit_nfe_forward,
+                                 implicit_step, is_implicit_method,
+                                 odeint_implicit)
 from repro.core.integrators import solve_fixed, solve_fixed_trajectory
 from repro.core.revolve import (optimal_extra_steps,
                                 prop2_optimal_extra_steps, reverse_schedule,
@@ -15,4 +19,7 @@ __all__ = [
     "optimal_extra_steps", "prop2_optimal_extra_steps", "reverse_schedule",
     "sweep_checkpoint_positions", "nfe_forward", "nfe_backward",
     "checkpoint_floats", "implicit_step", "AdaptiveInfo",
+    "IMPLICIT_METHODS", "IMPLICIT_POLICIES", "ImplicitStats",
+    "is_implicit_method", "implicit_nfe_forward", "implicit_nfe_backward",
+    "implicit_checkpoint_floats",
 ]

@@ -1,4 +1,5 @@
-"""Implicit time integration with discrete adjoints (paper §3.3).
+"""Implicit time integration with discrete adjoints (paper §3.3) under the
+memory-plan / checkpoint-offload stack.
 
 Theta-method family:  u_{n+1} = u_n + h [ (1-theta) f(u_n) + theta f(u_{n+1}) ]
   theta = 1.0  -> backward Euler   (paper eq. 12)
@@ -16,19 +17,65 @@ Reverse pass (discrete adjoint, paper eq. 13 generalized to theta-methods):
     mu_n  += h * [ (1-theta) f_th(u_n) + theta f_th(u_{n+1}) ]^T lam_s
 
 The nonlinear/linear solvers never enter the backpropagation graph — only
-``f`` is differentiated (one vjp per GMRES/adjoint application), which is the
-paper's key memory argument for implicit schemes.
+``f`` is differentiated (one vjp per GMRES/adjoint application), which is
+the paper's key memory argument for implicit schemes AND what makes
+checkpoint spacing cheap here: a checkpoint is one *converged state*
+vector, the Newton/GMRES iterates are never stored.
+
+Checkpoint policies (``adjoint=``), mirroring ``core/adjoint.py``:
+
+  pnode     store every converged state u_0..u_{N-1} (+ u_final); the
+            reverse pass solves one transposed linear system per step with
+            zero recomputation.  Under ``offload="spill"`` the states are
+            segment-batched through the host-callback ``SpillStore``
+            (one ``write_batch``/``prefetch`` round-trip per
+            ceil(sqrt(N_t))-step segment), so device-live memory is
+            O(segment) states regardless of N_t — and, unlike the explicit
+            scanned spill path, this one is **vmap-compatible**: the store
+            callbacks are vectorized (``vmap_method="broadcast_all"``), a
+            single host round-trip carries the whole batch and each batch
+            element occupies its own block of the spilled slot (the
+            per-batch-element key scheme; see ``repro.mem.offload``).
+  revolve   binomial (Prop. 2) checkpoint schedule over states only:
+            ``ncheck`` slots, segments re-advanced by re-running the Newton
+            solve — recomputation trades against memory exactly as in the
+            explicit case, except a slot costs S bytes, not (N_s+1)S.
+            Slots live in a ``CheckpointStore`` tier
+            (device / pinned-host / callback-spill).
+  revolve2  scanned two-level variant (bounded compiled liveness): boundary
+            states in the store, each segment re-advanced once and
+            adjointed under ``lax.scan``.
+  auto      delegate the (policy, ncheck, offload) choice to
+            ``repro.mem.planner.plan_odeint`` under ``mem_budget=<bytes>``
+            (the implicit cost model: per-step recompute cost
+            newton_iters*(gmres_iters+2)+1 f evaluations, NFE-B
+            gmres_iters+2 per adjoint solve).
+
+``adjoint="naive"`` (AD through the solver) is impossible by construction:
+Newton/GMRES run in ``while_loop``s that have no reverse rule — the
+paper's motivating limitation.  The AD-through-a-dense-unrolled-Newton
+oracle in tests/test_reverse_accuracy.py is the exactness reference.
+
+Convergence reporting: every path threads a converged flag and the final
+Newton residual out of the step loop; ``odeint_implicit(...,
+return_stats=True)`` returns ``(u_final, ImplicitStats)`` where
+``stats.diverged`` is True if ANY step exhausted ``newton_iters`` with
+residual > ``newton_tol`` (instead of silently returning garbage states
+and gradients), ``stats.max_residual`` is the worst final residual and
+``stats.newton_iters`` the total iteration count (the measured forward
+NFE driver).
 """
 from __future__ import annotations
 
 import functools
-from typing import Any, Callable
+from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
 from jax import tree_util as jtu
 from jax.scipy.sparse.linalg import gmres
 
+from repro.core import revolve as revolve_mod
 from repro.core.integrators import (
     PyTree,
     VectorField,
@@ -39,6 +86,9 @@ from repro.core.integrators import (
     tree_sub,
     tree_zeros_like,
 )
+
+IMPLICIT_METHODS = ("beuler", "cn")
+IMPLICIT_POLICIES = ("pnode", "revolve", "revolve2")
 
 
 def _mass_apply(mass):
@@ -62,19 +112,65 @@ def _theta_of(method: str) -> float:
         return 1.0
     if method == "cn":
         return 0.5
-    raise ValueError(f"unknown implicit method {method!r}; use 'beuler' or 'cn'")
+    raise ValueError(f"unknown implicit method {method!r}; use 'beuler' or "
+                     "'cn'")
+
+
+def is_implicit_method(method: str) -> bool:
+    return method in IMPLICIT_METHODS
+
+
+class StepInfo(NamedTuple):
+    """Per-step Newton exit state (threaded out of the solve scan)."""
+    iters: jax.Array      # Newton iterations taken
+    residual: jax.Array   # final ||residual|| at exit
+    converged: jax.Array  # residual <= newton_tol at exit
+
+
+class ImplicitStats(NamedTuple):
+    """Solve-level convergence report (see ``return_stats=``)."""
+    diverged: jax.Array      # any step exited on newton_iters with r > tol
+    max_residual: jax.Array  # worst final Newton residual across steps
+    newton_iters: jax.Array  # total Newton iterations over the solve
+
+
+class _SolverConfig(NamedTuple):
+    """Static (hashable) solver knobs — a single nondiff custom_vjp arg."""
+    theta: float
+    newton_iters: int
+    newton_tol: float
+    gmres_iters: int
+    gmres_tol: float
+
+
+def _stats_zero() -> ImplicitStats:
+    return ImplicitStats(jnp.zeros((), jnp.bool_),
+                         jnp.zeros((), jnp.result_type(float)),
+                         jnp.zeros((), jnp.int32))
+
+
+def _stats_merge(stats: ImplicitStats, info: StepInfo) -> ImplicitStats:
+    return ImplicitStats(
+        jnp.logical_or(stats.diverged, jnp.logical_not(info.converged)),
+        jnp.maximum(stats.max_residual, info.residual),
+        stats.newton_iters + info.iters.astype(jnp.int32))
 
 
 # ---------------------------------------------------------------------------
-# one implicit step (forward)
+# one implicit step (forward) and its discrete adjoint
 # ---------------------------------------------------------------------------
 
 def implicit_step(f: VectorField, u_n: PyTree, theta_p: PyTree, t_n, h,
                   theta: float, newton_iters: int = 10,
                   newton_tol: float = 1e-9, gmres_iters: int = 20,
-                  gmres_tol: float = 1e-10, mass=None) -> PyTree:
+                  gmres_tol: float = 1e-10, mass=None):
     """Solve M u_{n+1} = M u_n + h[(1-theta) f(u_n, t_n) + theta f(u_{n+1},
-    t_{n+1})] (eq. 12 generalized; mass=None means M = I)."""
+    t_{n+1})] (eq. 12 generalized; mass=None means M = I).
+
+    Returns ``(u_{n+1}, StepInfo)`` — the converged flag is the Newton exit
+    condition ``residual <= newton_tol``; callers that loop steps aggregate
+    it into ``ImplicitStats`` instead of silently dropping non-convergence.
+    """
     t_next = t_n + h
     f_n = f(u_n, theta_p, t_n)
     apply_m = _mass_apply(mass)
@@ -106,8 +202,9 @@ def implicit_step(f: VectorField, u_n: PyTree, theta_p: PyTree, t_n, h,
     # predictor: explicit Euler
     v0 = tree_axpy(h, f_n, u_n)
     carry0 = (v0, jnp.array(0, jnp.int32), tree_norm(residual(v0)))
-    v_final, _, _ = jax.lax.while_loop(newton_cond, newton_body, carry0)
-    return v_final
+    v_final, iters, rnorm = jax.lax.while_loop(newton_cond, newton_body,
+                                               carry0)
+    return v_final, StepInfo(iters, rnorm, rnorm <= newton_tol)
 
 
 def implicit_adjoint_step(f: VectorField, u_n: PyTree, u_next: PyTree,
@@ -139,81 +236,269 @@ def implicit_adjoint_step(f: VectorField, u_n: PyTree, u_next: PyTree,
     return lam_prev, th_bar
 
 
+def _step(f, cfg: _SolverConfig, u, theta_p, t_n, h):
+    return implicit_step(f, u, theta_p, t_n, h, cfg.theta, cfg.newton_iters,
+                         cfg.newton_tol, cfg.gmres_iters, cfg.gmres_tol)
+
+
+def _adjoint_step(f, cfg: _SolverConfig, u_n, u_next, theta_p, t_n, h, lam):
+    return implicit_adjoint_step(f, u_n, u_next, theta_p, t_n, h, cfg.theta,
+                                 lam, cfg.gmres_iters, cfg.gmres_tol)
+
+
 # ---------------------------------------------------------------------------
-# full solve with discrete adjoint (custom_vjp)
+# Table-2-style accounting for the implicit family (the planner's model)
+# ---------------------------------------------------------------------------
+
+def implicit_step_fevals(newton_iters: int = 10,
+                         gmres_iters: int = 20) -> int:
+    """f evaluations one implicit step costs (the recompute unit): the
+    predictor's f, plus per Newton iteration one residual f, one f
+    linearization per GMRES iteration (the jvp matrix action), and the
+    exit-residual f."""
+    return int(newton_iters) * (int(gmres_iters) + 2) + 1
+
+
+def implicit_adjoint_fevals(gmres_iters: int = 20) -> int:
+    """f linearizations one discrete-adjoint step costs (NFE-B unit): one
+    vjp application per transposed-GMRES iteration plus the two explicit
+    vjps (lam_n and the theta increment)."""
+    return int(gmres_iters) + 2
+
+
+def implicit_nfe_forward(n_steps: int, newton_iters: int = 10,
+                         gmres_iters: int = 20) -> int:
+    return n_steps * implicit_step_fevals(newton_iters, gmres_iters)
+
+
+def implicit_nfe_backward(n_steps: int, adjoint: str,
+                          ncheck: int | None = None,
+                          newton_iters: int = 10,
+                          gmres_iters: int = 20) -> int:
+    """Analytic NFE-B for the implicit policies: every policy pays one
+    transposed-GMRES adjoint solve per step; revolve/revolve2 additionally
+    re-run the Newton solve for recomputed steps."""
+    adj = n_steps * implicit_adjoint_fevals(gmres_iters)
+    stepc = implicit_step_fevals(newton_iters, gmres_iters)
+    if adjoint == "pnode":
+        return adj
+    if adjoint == "revolve":
+        return revolve_mod.optimal_extra_steps(n_steps, ncheck) * stepc + adj
+    if adjoint == "revolve2":
+        n_bound = len(revolve_mod.sweep_checkpoint_positions(
+            n_steps, ncheck)) + 1
+        return (n_steps - n_bound) * stepc + adj
+    raise ValueError(adjoint)
+
+
+def implicit_checkpoint_floats(n_steps: int, adjoint: str, state_size: int,
+                               ncheck: int | None = None) -> int:
+    """Checkpoint storage in floats: ONLY converged states are stored (the
+    Newton/GMRES iterates never enter the graph), so a slot costs S — not
+    the explicit family's (N_s+1)S."""
+    if adjoint == "pnode":
+        return (n_steps + 1) * state_size
+    if adjoint == "revolve":
+        return (ncheck + 1) * state_size
+    if adjoint == "revolve2":
+        bounds = [0] + revolve_mod.sweep_checkpoint_positions(n_steps, ncheck)
+        seg = max(b - a for a, b in zip(bounds, bounds[1:] + [n_steps]))
+        return (len(bounds) + seg + 1) * state_size
+    raise ValueError(adjoint)
+
+
+# ---------------------------------------------------------------------------
+# public API
 # ---------------------------------------------------------------------------
 
 def odeint_implicit(f: VectorField, u0: PyTree, theta_p: PyTree, *, dt: float,
                     n_steps: int, t0: float = 0.0, method: str = "cn",
+                    adjoint: str = "pnode", ncheck: int | None = None,
+                    offload: str | None = None,
+                    offload_segment: int | None = None,
+                    mem_budget: int | None = None,
+                    mem_verify: str = "measure",
                     newton_iters: int = 10, newton_tol: float = 1e-9,
                     gmres_iters: int = 20, gmres_tol: float = 1e-10,
-                    mass=None) -> PyTree:
+                    mass=None, return_stats: bool = False) -> PyTree:
+    """Fixed-step implicit theta-method solve with a discrete adjoint.
+
+    ``adjoint`` selects the checkpoint policy (``pnode`` dense states /
+    ``revolve`` / ``revolve2``; ``auto`` + ``mem_budget=<bytes>`` delegates
+    to the ``repro.mem`` planner, which knows the implicit cost model).
+    ``offload`` routes checkpoints through a ``repro.mem.offload`` store
+    tier exactly like the explicit ``odeint``; gradients are
+    bitwise-identical across tiers.  ``return_stats=True`` returns
+    ``(u_final, ImplicitStats)`` so Newton/GMRES non-convergence surfaces
+    as ``stats.diverged`` instead of silently wrong states/gradients.
+
+    The scanned ``pnode`` + ``offload="spill"`` path supports ``jax.vmap``
+    (batched stiff ensembles under a byte budget): the spill callbacks are
+    vectorized, one host round-trip per segment carries the whole batch.
+    The slot-addressed revolve tiers reject vmap up front like the
+    explicit path does.
+    """
+    n_steps = int(n_steps)
+    if n_steps < 1:
+        raise ValueError(f"n_steps must be >= 1, got {n_steps}")
+    theta = _theta_of(method)
+
     if mass is not None:
-        # close over the (static) mass operator so the custom_vjp signature
-        # stays hashable
-        fm = f
+        if (adjoint != "pnode" or offload is not None
+                or mem_budget is not None):
+            raise ValueError(
+                "mass-matrix solves support only the default dense path "
+                "(adjoint='pnode', no offload/mem_budget): the mass "
+                "operator is closed over statically and the solve is "
+                "forward-only (see _odeint_implicit_mass)")
+        return _odeint_implicit_mass(f, mass, float(t0), float(dt), n_steps,
+                                     theta, int(newton_iters),
+                                     float(newton_tol), int(gmres_iters),
+                                     float(gmres_tol), u0, theta_p,
+                                     return_stats)
 
-        def wrapped(*args):
-            return _odeint_implicit_mass(fm, mass, float(t0), float(dt),
-                                         int(n_steps), _theta_of(method),
-                                         int(newton_iters), float(newton_tol),
-                                         int(gmres_iters), float(gmres_tol),
-                                         *args)
-        return wrapped(u0, theta_p)
-    return _odeint_implicit(f, float(t0), float(dt), int(n_steps),
-                            _theta_of(method), int(newton_iters),
-                            float(newton_tol), int(gmres_iters),
-                            float(gmres_tol), u0, theta_p)
+    from_auto = adjoint == "auto"
+    if from_auto:
+        from repro.mem.planner import plan_odeint  # deferred: import cycle
+        plan = plan_odeint(
+            f, u0, theta_p, dt=float(dt), n_steps=n_steps, t0=float(t0),
+            method=method, mem_budget=mem_budget, verify=mem_verify,
+            solver_opts=dict(newton_iters=int(newton_iters),
+                             newton_tol=float(newton_tol),
+                             gmres_iters=int(gmres_iters),
+                             gmres_tol=float(gmres_tol)))
+        adjoint, ncheck = plan.policy, plan.ncheck
+        offload = plan.offload if plan.offload is not None else offload
+    elif mem_budget is not None:
+        raise ValueError(
+            "mem_budget is only meaningful with adjoint='auto' (the planner "
+            f"chooses the policy); got adjoint={adjoint!r}")
+    if adjoint == "naive":
+        raise ValueError(
+            "adjoint='naive' (AD through the solver) is impossible for "
+            "implicit methods: Newton/GMRES run in while_loops with no "
+            "reverse rule — the paper's motivating limitation; use one of "
+            f"{IMPLICIT_POLICIES} (or 'auto' with mem_budget)")
+    if adjoint not in IMPLICIT_POLICIES:
+        raise ValueError(f"unknown implicit adjoint policy {adjoint!r}; one "
+                         f"of {IMPLICIT_POLICIES} (or 'auto' with "
+                         "mem_budget)")
+    from repro.core.adjoint import _OFFLOAD_TIERS, _validate_ncheck
+    if offload not in _OFFLOAD_TIERS:
+        raise ValueError(f"unknown offload tier {offload!r}; one of "
+                         f"{_OFFLOAD_TIERS}")
+    offloaded = offload in ("host", "spill")
+    if offload_segment is not None:
+        if offload != "spill":
+            raise ValueError(
+                "offload_segment only applies to the callback spill tier "
+                f"(offload='spill'); got offload={offload!r}")
+        if adjoint != "pnode":
+            raise ValueError(
+                "offload_segment only applies to the scanned pnode sweep "
+                f"(adjoint='pnode'); adjoint={adjoint!r} checkpoints are "
+                "slot-addressed at trace time")
+        offload_segment = int(offload_segment)
+        if offload_segment < 1:
+            raise ValueError(
+                f"offload_segment must be >= 1, got {offload_segment}")
 
+    cfg = _SolverConfig(theta, int(newton_iters), float(newton_tol),
+                        int(gmres_iters), float(gmres_tol))
+    t0, dt = float(t0), float(dt)
+
+    if adjoint in ("revolve", "revolve2"):
+        ncheck = _validate_ncheck(adjoint, ncheck, n_steps)
+        if offloaded:
+            # slot-addressed stores see one logical slot per batch — the
+            # same aliasing hazard the explicit path rejects up front
+            from repro.core.adjoint import _reject_vmap_offload
+            _reject_vmap_offload(u0, theta_p,
+                                 f"odeint_implicit(adjoint={adjoint!r})")
+        from repro.mem.offload import make_store  # deferred: import cycle
+        store = make_store(offload)
+        impl = _imp_revolve if adjoint == "revolve" else _imp_revolve2
+        u_final, stats = impl(f, cfg, t0, dt, n_steps, ncheck, store, u0,
+                              theta_p)
+    elif offloaded:  # pnode
+        if offload == "host":
+            raise ValueError(
+                "offload='host' applies to trace-time checkpoint sites "
+                "(revolve/revolve2); the scanned pnode sweep offloads "
+                "through offload='spill'")
+        from repro.mem.offload import (batch_scale, default_segment,
+                                       make_store)
+        segment = (offload_segment if offload_segment is not None
+                   else default_segment(n_steps))
+        store = make_store("spill")
+        # mapped axes are only visible HERE (as BatchTracers on the args);
+        # the custom_vjp fwd is retraced at logical shapes, so the store's
+        # payload-cap chunking needs the batch factor handed to it
+        store.payload_scale = batch_scale((u0, theta_p))
+        u_final, stats = _imp_spill(f, cfg, t0, dt, n_steps, store,
+                                    min(segment, n_steps), u0, theta_p)
+    else:
+        u_final, stats = _imp_dense(f, cfg, t0, dt, n_steps, u0, theta_p)
+    return (u_final, stats) if return_stats else u_final
+
+
+# ---------------------------------------------------------------------------
+# mass-matrix path (forward-only; kept from the pre-offload implementation)
+# ---------------------------------------------------------------------------
 
 def _odeint_implicit_mass(f, mass, t0, dt, n_steps, theta, newton_iters,
-                          newton_tol, gmres_iters, gmres_tol, u0, theta_p):
-    """Mass-matrix path (no custom_vjp shortcut: differentiates through the
-    per-step adjoint explicitly by reusing implicit_adjoint_step in a manual
-    scan -- forward-only use + grad via the theta-method identity)."""
+                          newton_tol, gmres_iters, gmres_tol, u0, theta_p,
+                          return_stats):
+    """Mass-matrix path (no custom_vjp shortcut: the mass operator is
+    closed over statically; forward-only use)."""
     def body(carry, n):
-        u = carry
+        u, stats = carry
         t_n = t0 + dt * n
-        u_next = implicit_step(f, u, theta_p, t_n, dt, theta, newton_iters,
-                               newton_tol, gmres_iters, gmres_tol, mass=mass)
-        return u_next, None
+        u_next, info = implicit_step(f, u, theta_p, t_n, dt, theta,
+                                     newton_iters, newton_tol, gmres_iters,
+                                     gmres_tol, mass=mass)
+        return (u_next, _stats_merge(stats, info)), None
 
-    u_final, _ = jax.lax.scan(body, u0, jnp.arange(n_steps))
-    return u_final
-
-
-@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3, 4, 5, 6, 7, 8))
-def _odeint_implicit(f, t0, dt, n_steps, theta, newton_iters, newton_tol,
-                     gmres_iters, gmres_tol, u0, theta_p):
-    u_final, _ = _implicit_solve(f, t0, dt, n_steps, theta, newton_iters,
-                                 newton_tol, gmres_iters, gmres_tol, u0,
-                                 theta_p, save_states=False)
-    return u_final
+    (u_final, stats), _ = jax.lax.scan(body, (u0, _stats_zero()),
+                                       jnp.arange(n_steps))
+    return (u_final, stats) if return_stats else u_final
 
 
-def _implicit_solve(f, t0, dt, n_steps, theta, newton_iters, newton_tol,
-                    gmres_iters, gmres_tol, u0, theta_p, save_states):
+# ---------------------------------------------------------------------------
+# dense pnode: every converged state rides the custom_vjp residuals
+# ---------------------------------------------------------------------------
+
+def _imp_solve(f, cfg, t0, dt, n_steps, u0, theta_p, save_states, base=0):
     def body(carry, n):
-        u = carry
-        t_n = t0 + dt * n
-        u_next = implicit_step(f, u, theta_p, t_n, dt, theta,
-                               newton_iters, newton_tol, gmres_iters, gmres_tol)
-        return u_next, (u if save_states else None)
+        u, stats = carry
+        # t as t0 + dt*(base+n) everywhere (not (t0+dt*base) + dt*n) so a
+        # recomputed segment's times — hence its states — are bitwise the
+        # forward sweep's
+        t_n = t0 + dt * (base + n)
+        u_next, info = _step(f, cfg, u, theta_p, t_n, dt)
+        return (u_next, _stats_merge(stats, info)), \
+            (u if save_states else None)
 
-    u_final, states = jax.lax.scan(body, u0, jnp.arange(n_steps))
-    return u_final, states
-
-
-def _odeint_implicit_fwd(f, t0, dt, n_steps, theta, newton_iters, newton_tol,
-                         gmres_iters, gmres_tol, u0, theta_p):
-    u_final, states = _implicit_solve(f, t0, dt, n_steps, theta, newton_iters,
-                                      newton_tol, gmres_iters, gmres_tol, u0,
-                                      theta_p, save_states=True)
-    return u_final, (states, u_final, theta_p)
+    (u_final, stats), states = jax.lax.scan(body, (u0, _stats_zero()),
+                                            jnp.arange(n_steps))
+    return u_final, stats, states
 
 
-def _odeint_implicit_bwd(f, t0, dt, n_steps, theta, newton_iters, newton_tol,
-                         gmres_iters, gmres_tol, res, g):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3, 4))
+def _imp_dense(f, cfg, t0, dt, n_steps, u0, theta_p):
+    u_final, stats, _ = _imp_solve(f, cfg, t0, dt, n_steps, u0, theta_p,
+                                   save_states=False)
+    return u_final, stats
+
+
+def _imp_dense_fwd(f, cfg, t0, dt, n_steps, u0, theta_p):
+    u_final, stats, states = _imp_solve(f, cfg, t0, dt, n_steps, u0, theta_p,
+                                        save_states=True)
+    return (u_final, stats), (states, u_final, theta_p)
+
+
+def _imp_dense_bwd(f, cfg, t0, dt, n_steps, res, ct):
+    g, _ = ct  # the stats output is non-differentiable; drop its cotangent
     states, u_final, theta_p = res
 
     # u_next for step n is states[n+1] (or u_final for the last step)
@@ -225,8 +510,8 @@ def _odeint_implicit_bwd(f, t0, dt, n_steps, theta, newton_iters, newton_tol,
         lam, mu = carry
         u_n, u_next, n = inp
         t_n = t0 + dt * n
-        lam, th_bar = implicit_adjoint_step(f, u_n, u_next, theta_p, t_n, dt,
-                                            theta, lam, gmres_iters, gmres_tol)
+        lam, th_bar = _adjoint_step(f, cfg, u_n, u_next, theta_p, t_n, dt,
+                                    lam)
         return (lam, tree_add(mu, th_bar)), None
 
     (lam, mu), _ = jax.lax.scan(
@@ -235,4 +520,237 @@ def _odeint_implicit_bwd(f, t0, dt, n_steps, theta, newton_iters, newton_tol,
     return lam, mu
 
 
-_odeint_implicit.defvjp(_odeint_implicit_fwd, _odeint_implicit_bwd)
+_imp_dense.defvjp(_imp_dense_fwd, _imp_dense_bwd)
+
+
+# ---------------------------------------------------------------------------
+# revolve: Prop-2 schedule over converged states, Newton re-advance between
+# checkpoints, slots in a CheckpointStore tier
+# ---------------------------------------------------------------------------
+
+def _imp_advance(f, cfg, u, theta_p, start_idx, m, t0, dt, stats=None):
+    """Re-run m implicit steps from u (step indices start_idx..start_idx+m-1)
+    — bitwise-identical to the forward sweep's states since the op sequence
+    is the same.  Stats aggregation is optional (the reverse-pass advances
+    drop it: their convergence is the forward's, already reported)."""
+    if m <= 0:
+        return (u, stats) if stats is not None else u
+
+    track = stats is not None
+
+    def body(carry, k):
+        u, st = carry
+        t = t0 + dt * (start_idx + k)
+        u, info = _step(f, cfg, u, theta_p, t, dt)
+        return (u, _stats_merge(st, info) if track else st), None
+
+    (u, stats), _ = jax.lax.scan(body, (u, stats), jnp.arange(m))
+    return (u, stats) if track else u
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3, 4, 5, 6))
+def _imp_revolve(f, cfg, t0, dt, n_steps, ncheck, store, u0, theta_p):
+    u_final, stats, _ = _imp_solve(f, cfg, t0, dt, n_steps, u0, theta_p,
+                                   save_states=False)
+    return u_final, stats
+
+
+def _imp_revolve_fwd(f, cfg, t0, dt, n_steps, ncheck, store, u0, theta_p):
+    positions = [0] + revolve_mod.sweep_checkpoint_positions(n_steps, ncheck)
+    bounds = positions + [n_steps]
+    u, stats = u0, _stats_zero()
+    for a, b in zip(bounds[:-1], bounds[1:]):
+        store.put(a, u)
+        u, stats = _imp_advance(f, cfg, u, theta_p, a, b - a, t0, dt, stats)
+    return (u, stats), (store.pack(), u, theta_p)
+
+
+def _imp_revolve_bwd(f, cfg, t0, dt, n_steps, ncheck, store, res, ct):
+    g, _ = ct
+    ckpt_res, u_final, theta_p = res
+    positions = [0] + revolve_mod.sweep_checkpoint_positions(n_steps, ncheck)
+    store.unpack(ckpt_res, positions)
+
+    lam = g
+    mu = tree_zeros_like(theta_p)
+    # the schedule adjoints steps in strictly decreasing order, so u_{n+1}
+    # for the step about to be adjointed is always the previous adjoint's
+    # checkpoint (u_final initially) — no stage storage needed at all
+    u_next = u_final
+    for act in revolve_mod.reverse_schedule(n_steps, ncheck):
+        kind = act[0]
+        if kind == "advance":
+            _, start, m = act
+            u = store.get(start)
+            u = _imp_advance(f, cfg, u, theta_p, start, m, t0, dt)
+            store.put(start + m, u)
+        elif kind == "adjoint":
+            _, idx = act
+            u_i = store.get(idx)
+            store.free(idx)
+            t_i = t0 + dt * idx
+            lam, th_bar = _adjoint_step(f, cfg, u_i, u_next, theta_p, t_i,
+                                        dt, lam)
+            mu = tree_add(mu, th_bar)
+            u_next = u_i
+            # trace-time-unrolled chain: serialize so XLA cannot keep every
+            # step's theta-sized gradients live at once (see explicit path)
+            lam, mu = jax.lax.optimization_barrier((lam, mu))
+        elif kind == "free":
+            store.free(act[1])
+        else:  # pragma: no cover
+            raise ValueError(act)
+    return lam, mu
+
+
+_imp_revolve.defvjp(_imp_revolve_fwd, _imp_revolve_bwd)
+
+
+# ---------------------------------------------------------------------------
+# revolve2: boundary states + scanned per-segment re-advance/adjoint
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3, 4, 5, 6))
+def _imp_revolve2(f, cfg, t0, dt, n_steps, ncheck, store, u0, theta_p):
+    u_final, stats, _ = _imp_solve(f, cfg, t0, dt, n_steps, u0, theta_p,
+                                   save_states=False)
+    return u_final, stats
+
+
+def _imp_revolve2_fwd(f, cfg, t0, dt, n_steps, ncheck, store, u0, theta_p):
+    from repro.core.adjoint import _segment_bounds
+    u, stats = u0, _stats_zero()
+    for a, b in _segment_bounds(n_steps, ncheck):
+        store.put(a, u)
+        u, stats = _imp_advance(f, cfg, u, theta_p, a, b - a, t0, dt, stats)
+    return (u, stats), (store.pack(), theta_p)
+
+
+def _imp_revolve2_bwd(f, cfg, t0, dt, n_steps, ncheck, store, res, ct):
+    g, _ = ct
+    ckpt_res, theta_p = res
+    from repro.core.adjoint import _segment_bounds
+    bounds = _segment_bounds(n_steps, ncheck)
+    store.unpack(ckpt_res, [a for a, _ in bounds])
+
+    lam = g
+    mu = tree_zeros_like(theta_p)
+    for a, b in reversed(bounds):
+        m = b - a
+        u_a = store.get(a)
+        store.free(a)
+        # re-advance the segment, saving states (scan); the recomputed
+        # segment end is bitwise the forward's u_b
+        u_b, _, states = _imp_solve(f, cfg, t0, dt, m, u_a, theta_p,
+                                    save_states=True, base=a)
+        u_nexts = jtu.tree_map(
+            lambda s, ub: jnp.concatenate([s[1:], ub[None]], axis=0), states,
+            u_b)
+
+        def body(carry, inp):
+            lam_, mu_ = carry
+            u_n, u_next, n = inp
+            t_n = t0 + dt * (a + n)
+            lam_, th_bar = _adjoint_step(f, cfg, u_n, u_next, theta_p, t_n,
+                                         dt, lam_)
+            return (lam_, tree_add(mu_, th_bar)), None
+
+        (lam, mu), _ = jax.lax.scan(
+            body, (lam, mu), (states, u_nexts, jnp.arange(m)), reverse=True)
+    return lam, mu
+
+
+_imp_revolve2.defvjp(_imp_revolve2_fwd, _imp_revolve2_bwd)
+
+
+# ---------------------------------------------------------------------------
+# pnode + spill: segment-batched host-callback checkpoint streaming.  The
+# residual is one token scalar + u_final, so compiled device-live memory is
+# O(segment) state vectors regardless of N_t.  vmap-compatible: the store's
+# batched callbacks ship the whole batch per round-trip (each element's
+# checkpoints occupy its own block of the slot) — the per-batch-element key
+# scheme that lets thousands of vmapped stiff systems train under one
+# memory budget.
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3, 4, 5, 6))
+def _imp_spill(f, cfg, t0, dt, n_steps, store, segment, u0, theta_p):
+    u_final, stats, _ = _imp_solve(f, cfg, t0, dt, n_steps, u0, theta_p,
+                                   save_states=False)
+    return u_final, stats
+
+
+def _imp_spill_fwd(f, cfg, t0, dt, n_steps, store, segment, u0, theta_p):
+    n_full, rem = divmod(n_steps, segment)
+
+    def run_segment(u, stats, tok, base, m):
+        def step(carry, i):
+            u, st = carry
+            t = t0 + dt * (base + i)
+            u_next, info = _step(f, cfg, u, theta_p, t, dt)
+            return (u_next, _stats_merge(st, info)), u
+
+        (u, stats), staged = jax.lax.scan(step, (u, stats), jnp.arange(m))
+        tok = store.write_batch(tok, base, staged)  # ONE callback, m slots
+        return u, stats, tok
+
+    u, stats, tok = u0, _stats_zero(), store.init_token()
+    if n_full:
+        def seg_body(carry, s_idx):
+            u, stats, tok = carry
+            u, stats, tok = run_segment(u, stats, tok, s_idx * segment,
+                                        segment)
+            return (u, stats, tok), None
+
+        (u, stats, tok), _ = jax.lax.scan(seg_body, (u, stats, tok),
+                                          jnp.arange(n_full))
+    if rem:
+        u, stats, tok = run_segment(u, stats, tok,
+                                    jnp.asarray(n_full * segment), rem)
+    return (u, stats), (tok, u, theta_p)
+
+
+def _imp_spill_bwd(f, cfg, t0, dt, n_steps, store, segment, res, ct):
+    g, _ = ct
+    tok, u_final, theta_p = res
+    n_full, rem = divmod(n_steps, segment)
+
+    def run_segment_bwd(lam, mu, u_next, tok, base, m):
+        tok, states = store.prefetch(tok, base, m)  # ONE callback, m slots
+        u_nexts = jtu.tree_map(
+            lambda s, un: jnp.concatenate([s[1:], un[None]], axis=0), states,
+            u_next)
+
+        def step(carry, inp):
+            lam, mu = carry
+            u_n, u_np1, i = inp
+            t_n = t0 + dt * (base + i)
+            lam, th_bar = _adjoint_step(f, cfg, u_n, u_np1, theta_p, t_n, dt,
+                                        lam)
+            return (lam, tree_add(mu, th_bar)), None
+
+        (lam, mu), _ = jax.lax.scan(step, (lam, mu),
+                                    (states, u_nexts, jnp.arange(m)),
+                                    reverse=True)
+        # the next (earlier) segment's u_next is this segment's first state
+        u_prev = jtu.tree_map(lambda s: s[0], states)
+        return lam, mu, u_prev, tok
+
+    lam, mu, u_next = g, tree_zeros_like(theta_p), u_final
+    if rem:  # the trailing partial segment is adjointed first
+        lam, mu, u_next, tok = run_segment_bwd(
+            lam, mu, u_next, tok, jnp.asarray(n_full * segment), rem)
+    if n_full:
+        def seg_body(carry, s_idx):
+            lam, mu, u_next, tok = carry
+            lam, mu, u_next, tok = run_segment_bwd(lam, mu, u_next, tok,
+                                                   s_idx * segment, segment)
+            return (lam, mu, u_next, tok), None
+
+        (lam, mu, u_next, tok), _ = jax.lax.scan(
+            seg_body, (lam, mu, u_next, tok), jnp.arange(n_full),
+            reverse=True)
+    return lam, mu
+
+
+_imp_spill.defvjp(_imp_spill_fwd, _imp_spill_bwd)

@@ -21,6 +21,17 @@ N_l-dependent term that makes NODE-naive the steepest curve in Fig. 3).
 An ``offload`` tier moves the ckpt-storage term off device (see
 ``repro.mem.offload``); it never changes NFE-B.
 
+Implicit theta-methods (``method="beuler"|"cn"``) dispatch to their own
+Table-2 column (``core.implicit``): a checkpoint slot is ONE converged
+state (S bytes — the Newton/GMRES iterates never enter the graph), the
+reverse-step working set is dominated by the transposed-GMRES Krylov basis
+(``gmres_iters`` state vectors), NFE-B counts f *linearizations*
+(``implicit_adjoint_fevals`` per step) and a recomputed step costs a full
+Newton solve (``implicit_step_fevals`` = newton_iters*(gmres_iters+2)+1
+f evaluations) — which is why revolve checkpoint spacing is cheap in
+memory but expensive in recompute for stiff solves, and the planner's
+ranking by extra_fevals handles both families uniformly.
+
 The model is validated against measured byte counts of the lowered reverse
 pass (``launch/hlo_cost.peak_live_bytes`` on the compiled HLO) in
 tests/test_mem.py, and ``measure_reverse_cost`` here is the measurement
@@ -39,6 +50,10 @@ from jax import tree_util as jtu
 from repro.core import revolve as revolve_mod
 from repro.core.adjoint import (adjoint_stages, checkpoint_floats,
                                 nfe_backward)
+from repro.core.implicit import (IMPLICIT_POLICIES, implicit_adjoint_fevals,
+                                 implicit_checkpoint_floats,
+                                 implicit_nfe_backward, implicit_step_fevals,
+                                 is_implicit_method)
 from repro.core.tableaus import get_tableau
 
 PyTree = Any
@@ -135,12 +150,62 @@ def spill_callback_counts(policy: str, n_steps: int, *,
     return {"forward": 0, "backward": 0, "total": 0}
 
 
+#: state copies one implicit reverse step keeps in flight beyond the
+#: transposed-GMRES Krylov basis (lam, lam_s, u_n, u_next)
+_IMPLICIT_WORK_STATES = 4
+
+
+def _implicit_policy_cost(policy: str, *, n_steps: int, state_bytes: int,
+                          theta_bytes: int, ncheck: Optional[int],
+                          offload: Optional[str], segment: Optional[int],
+                          newton_iters: int, gmres_iters: int
+                          ) -> CostEstimate:
+    """Implicit-family Table-2 row: checkpoints are converged states only
+    (S bytes/slot), work is Krylov-basis dominated, recompute is Newton
+    solves (see module docstring)."""
+    if policy not in IMPLICIT_POLICIES:
+        raise ValueError(
+            f"policy {policy!r} is not available for implicit methods; "
+            f"one of {IMPLICIT_POLICIES} (AD-through-the-solver policies "
+            "have no reverse rule for the Newton/GMRES while_loops)")
+    work = (int(gmres_iters) + _IMPLICIT_WORK_STATES) * state_bytes \
+        + 3 * theta_bytes
+    ckpt = implicit_checkpoint_floats(n_steps, policy, state_bytes,
+                                      ncheck=ncheck)
+    extra = implicit_nfe_backward(n_steps, policy, ncheck=ncheck,
+                                  newton_iters=newton_iters,
+                                  gmres_iters=gmres_iters)
+    callbacks = 0
+    if offload == "spill":
+        callbacks = spill_callback_counts(policy, n_steps, ncheck=ncheck,
+                                          segment=segment)["total"]
+        if policy == "pnode":
+            # segment staging buffer (states only — no stages to stage)
+            from repro.mem.offload import default_segment
+            seg = min(segment or default_segment(n_steps), n_steps)
+            work += seg * state_bytes
+    return CostEstimate(policy=policy, ncheck=ncheck, offload=offload,
+                        ckpt_bytes=int(ckpt), work_bytes=int(work),
+                        extra_fevals=int(extra), reverse_accurate=True,
+                        host_callbacks=int(callbacks))
+
+
 def policy_cost(policy: str, *, method: str, n_steps: int, state_bytes: int,
                 theta_bytes: int = 0, f_act_bytes: Optional[int] = None,
                 ncheck: Optional[int] = None,
                 offload: Optional[str] = None,
-                segment: Optional[int] = None) -> CostEstimate:
-    """Analytic (peak bytes, extra f-evals) for one policy instance."""
+                segment: Optional[int] = None,
+                newton_iters: int = 10,
+                gmres_iters: int = 20) -> CostEstimate:
+    """Analytic (peak bytes, extra f-evals) for one policy instance.
+    ``newton_iters``/``gmres_iters`` only affect implicit methods."""
+    if is_implicit_method(method):
+        return _implicit_policy_cost(policy, n_steps=n_steps,
+                                     state_bytes=state_bytes,
+                                     theta_bytes=theta_bytes, ncheck=ncheck,
+                                     offload=offload, segment=segment,
+                                     newton_iters=newton_iters,
+                                     gmres_iters=gmres_iters)
     tab = get_tableau(method)
     s = tab.num_stages
     fa = f_act_bytes if f_act_bytes is not None else state_bytes
@@ -177,16 +242,22 @@ def policy_cost(policy: str, *, method: str, n_steps: int, state_bytes: int,
 
 
 def max_fitting_ncheck(budget: int, *, method: str, n_steps: int,
-                       state_bytes: int, theta_bytes: int = 0) -> Optional[int]:
+                       state_bytes: int, theta_bytes: int = 0,
+                       newton_iters: int = 10,
+                       gmres_iters: int = 20) -> Optional[int]:
     """Largest N_c whose revolve checkpoint set fits the byte budget
-    (Table-2 storage (N_c+1)(N_s+1)S), clamped to the valid [1, N_t-1]
-    range; None if even N_c = 1 does not fit."""
-    s = get_tableau(method).num_stages
+    (Table-2 storage (N_c+1)(N_s+1)S explicit, (N_c+1)S implicit — only
+    converged states are stored), clamped to the valid [1, N_t-1] range;
+    None if even N_c = 1 does not fit."""
     probe = policy_cost("revolve", method=method, n_steps=n_steps,
                         state_bytes=state_bytes, theta_bytes=theta_bytes,
-                        ncheck=1)
+                        ncheck=1, newton_iters=newton_iters,
+                        gmres_iters=gmres_iters)
     avail = budget - probe.work_bytes
-    per_slot = (s + 1) * state_bytes
+    if is_implicit_method(method):
+        per_slot = state_bytes
+    else:
+        per_slot = (get_tableau(method).num_stages + 1) * state_bytes
     if per_slot <= 0:
         return n_steps - 1
     k = avail // per_slot - 1
@@ -213,7 +284,8 @@ def measure_reverse_cost(f: Callable, u0: PyTree, theta: PyTree, *,
                          method: str = "rk4", policy: str = "pnode",
                          ncheck: Optional[int] = None,
                          offload: Optional[str] = None,
-                         loss_fn: Optional[Callable] = None
+                         loss_fn: Optional[Callable] = None,
+                         solver_opts: Optional[Dict[str, Any]] = None
                          ) -> Dict[str, float]:
     """Lower + compile the reverse pass (grad of a scalar loss of the
     solve) and measure its peak bytes two ways:
@@ -230,6 +302,11 @@ def measure_reverse_cost(f: Callable, u0: PyTree, theta: PyTree, *,
     budget check sees the real training objective's working set; the
     default is the canonical sum-of-squares surrogate.
 
+    ``solver_opts`` (newton_iters/newton_tol/gmres_iters/gmres_tol) is
+    forwarded to ``odeint_implicit`` for implicit methods — the measured
+    reverse pass uses the caller's actual solver configuration (the Krylov
+    basis scales with gmres_iters), and the opts are part of the cache key.
+
     Results are cached on (f identity, loss_fn identity, arg structure,
     solve configuration): a planner verify step compiles each candidate at
     most once per session.
@@ -237,17 +314,27 @@ def measure_reverse_cost(f: Callable, u0: PyTree, theta: PyTree, *,
     from repro.core.adjoint import odeint  # late: avoid import cycle
     from repro.launch.hlo_cost import peak_live_bytes
 
+    opts_key = None if solver_opts is None else \
+        tuple(sorted(solver_opts.items()))
     key = (id(f), None if loss_fn is None else id(loss_fn), _struct_key(u0),
            _struct_key(theta), float(dt), int(n_steps), float(t0), method,
-           policy, ncheck, offload, bool(jax.config.jax_enable_x64))
+           policy, ncheck, offload, opts_key,
+           bool(jax.config.jax_enable_x64))
     hit = _MEASURE_CACHE.get(key)
     if hit is not None:
         return hit[1]
 
     def loss(u0_, th_):
-        uf = odeint(f, u0_, th_, dt=dt, n_steps=n_steps, t0=t0,
-                    method=method, adjoint=policy, ncheck=ncheck,
-                    offload=offload)
+        if is_implicit_method(method):
+            from repro.core.implicit import odeint_implicit
+            uf = odeint_implicit(f, u0_, th_, dt=dt, n_steps=n_steps, t0=t0,
+                                 method=method, adjoint=policy,
+                                 ncheck=ncheck, offload=offload,
+                                 **(solver_opts or {}))
+        else:
+            uf = odeint(f, u0_, th_, dt=dt, n_steps=n_steps, t0=t0,
+                        method=method, adjoint=policy, ncheck=ncheck,
+                        offload=offload)
         if loss_fn is not None:
             return loss_fn(uf)
         return sum(jnp.sum(x * x) for x in jtu.tree_leaves(uf))

@@ -53,6 +53,18 @@ host I/O with compute on backends with async callbacks (on XLA:CPU
 these to cut host round-trips from O(n_steps) to O(n_segments); token
 threading is unchanged, so frees still cannot reorder ahead of reads.
 
+Payload cap: XLA:CPU copies callback operands/results on the same intra-op
+thread pool the callback itself occupies, and once a single buffer is
+large enough for that copy to be parallelized (~100 KiB measured on jax
+0.4.37) the nested parallel-for deadlocks the pool — the callback never
+returns and the program hangs.  ``write_batch``/``prefetch`` therefore
+split any segment whose largest per-leaf payload (batch axes included)
+exceeds ``_CB_PAYLOAD_CAP`` into multiple token-chained callbacks of
+slot-aligned chunks.  ``spill_stats()`` counts every chunk callback, so
+the BENCH gates price the real host round-trips.  A single slot bigger
+than the cap cannot be split further (warned; the slot-addressed
+``put``/``write_at`` paths have the same exposure).
+
 ``spill_stats()`` / ``reset_spill_stats()`` expose host-side callback
 counters (actual executions, not traces) for the BENCH_3 hot-path
 benchmark and the per-segment callback-count tests.
@@ -62,8 +74,15 @@ N_c*(N_s+1) checkpoint vectors live, never how many f-evaluations the
 policy performs — spill grads are bitwise-identical to device grads
 (tests/test_mem.py).
 
-Not supported under ``vmap`` (the callback sees one logical index); stores
-are per-``odeint``-call objects, so concurrent solves never share keys.
+vmap: the *slot-addressed* mode is not supported under ``vmap`` (the
+callback sees one logical index for the whole batch, so per-example
+checkpoints would alias — ``core.adjoint._reject_vmap_offload`` catches it
+up front).  The *segment-batched* mode IS (``vmap_method="broadcast_all"``):
+one callback serves the entire batch, each slot stores the full batch
+block with batch axes leading, so element b's checkpoints occupy index b
+of the block — the per-batch-element key scheme the vmapped implicit
+ensembles rely on (``core.implicit``).  Stores are per-``odeint``-call
+objects, so concurrent solves never share keys.
 """
 from __future__ import annotations
 
@@ -79,6 +98,63 @@ PyTree = Any
 TIERS = ("device", "host", "spill")
 
 _TOKEN_SDS = jax.ShapeDtypeStruct((), jnp.float32)
+
+#: per-callback payload cap in bytes, applied to each operand/result leaf
+#: with mapped batch axes counted.  Above ~100 KiB the XLA:CPU callback
+#: buffer copy is parallelized on the pool the callback blocks, and the
+#: program deadlocks (see module docstring); 96 KiB keeps headroom.
+_CB_PAYLOAD_CAP = 96 * 1024
+
+
+def batch_scale(tree: PyTree) -> int:
+    """Product of mapped-axis sizes riding the leaves of ``tree`` — the
+    factor by which vmap multiplies every callback payload.
+
+    Must be called where the mapped axes are still visible as
+    ``BatchTracer``s (the ``odeint`` entry point, like
+    ``core.adjoint._reject_vmap_offload``): ``custom_vjp`` forwards are
+    retraced at *logical* shapes, so by the time ``write_batch`` runs the
+    batch axes cannot be recovered from its arguments."""
+    try:
+        from jax.interpreters.batching import BatchTracer
+    except ImportError:  # pragma: no cover - future jax moved it
+        return 1
+
+    def scale(x) -> int:
+        s, y, depth = 1, x, 0
+        while isinstance(y, jax.core.Tracer) and depth < 8:
+            if isinstance(y, BatchTracer):
+                bd = getattr(y, "batch_dim", None)
+                if isinstance(bd, int):
+                    s *= int(np.shape(y.val)[bd])
+                y = y.val
+            else:
+                nxt = getattr(y, "primal", None)
+                if nxt is None:
+                    nxt = getattr(y, "val", None)
+                if nxt is None or nxt is y:
+                    break
+                y = nxt
+            depth += 1
+        return s
+
+    return max((scale(x) for x in jtu.tree_leaves(tree)), default=1)
+
+
+def _chunk_slots(seg: int, per_slot_bytes: int) -> int:
+    """Slots per callback so no payload leaf exceeds ``_CB_PAYLOAD_CAP``."""
+    if per_slot_bytes <= 0:
+        return seg
+    m = int(_CB_PAYLOAD_CAP // per_slot_bytes)
+    if m < 1:
+        import warnings
+        warnings.warn(
+            f"spill store: a single checkpoint slot is {per_slot_bytes} "
+            f"bytes, above the {_CB_PAYLOAD_CAP}-byte per-callback payload "
+            "cap; XLA:CPU may deadlock copying it (see "
+            "repro.mem.offload docstring)", stacklevel=3)
+        return 1
+    return min(m, seg)
 
 #: host-side callback counters (incremented when a callback EXECUTES, not
 #: when it is traced) — the measured quantity behind the "one callback per
@@ -257,6 +333,11 @@ class SpillStore(CheckpointStore):
         self._meta: Dict[Any, Tuple[Any, Tuple[jax.ShapeDtypeStruct, ...]]] = {}
         self._tok = None
         self.effective_tier = "spill"
+        #: vmap payload multiplier for the chunking decision — set by the
+        #: odeint entry point via ``batch_scale(...)`` (mapped axes are
+        #: invisible by the time write_batch/prefetch are traced; see
+        #: ``batch_scale``).
+        self.payload_scale = 1
 
     # -- host-side callbacks (never traced) ---------------------------------
     def _cb_write(self, token, slot, *leaves):
@@ -292,31 +373,45 @@ class SpillStore(CheckpointStore):
 
     def _cb_write_batch(self, token, base, *stacked):
         """ONE host round-trip storing seg consecutive slots (leaves arrive
-        stacked on axis 0)."""
-        seg = int(np.shape(stacked[0])[0])
+        stacked on the segment axis).
+
+        Batch-aware: under ``vmap`` (``vmap_method="broadcast_all"``) every
+        argument arrives broadcast to the full batch shape — the token's
+        ndim IS the number of mapped axes (its logical shape is scalar), so
+        the segment axis sits at ``np.ndim(token)`` and each slot stores
+        the whole batch block ``arr[..., i, :]``.  One callback serves the
+        entire batch and batch elements never alias: element b's
+        checkpoints live at index b of its slot's block (the
+        per-batch-element key scheme)."""
+        bnd = np.ndim(token)
+        seg = int(np.shape(stacked[0])[bnd])
         _SPILL_STATS["write_cb"] += 1
         _SPILL_STATS["write_slots"] += seg
-        base = int(base)
+        base = int(np.ravel(base)[0])  # broadcast copies are identical
         arrs = [np.asarray(x) for x in stacked]
+        sl = (slice(None),) * bnd
         for i in range(seg):
-            self._host[base + i] = [a[i].copy() for a in arrs]
-        return np.float32(0)
+            self._host[base + i] = [a[sl + (i,)].copy() for a in arrs]
+        return np.zeros(np.shape(token), np.float32)
 
     def _cb_prefetch(self, seg):
         def fetch(token, base):
             _SPILL_STATS["read_cb"] += 1
             _SPILL_STATS["read_slots"] += seg
             _, sds = self._meta["idx"]
-            base = int(base)
+            bshape = np.shape(token)  # mapped axes (see _cb_write_batch)
+            bnd = len(bshape)
+            base = int(np.ravel(base)[0])
+            sl = (slice(None),) * bnd
             out = []
             for k, s in enumerate(sds):
-                stack = np.zeros((seg,) + tuple(s.shape), s.dtype)
+                stack = np.zeros(bshape + (seg,) + tuple(s.shape), s.dtype)
                 for i in range(seg):
                     leaves = self._host.get(base + i)
                     if leaves is not None:  # missing slots read as zeros
-                        stack[i] = leaves[k]
+                        stack[sl + (i,)] = leaves[k]
                 out.append(stack)
-            return (np.float32(0),) + tuple(out)
+            return (np.zeros(bshape, np.float32),) + tuple(out)
         return fetch
 
     # -- metadata ------------------------------------------------------------
@@ -367,10 +462,11 @@ class SpillStore(CheckpointStore):
 
     # -- segment-batched -----------------------------------------------------
     def write_batch(self, token, base, tree: PyTree):
-        """Store slots ``[base, base+seg)`` in ONE callback.  ``tree`` leaves
-        carry the segment on axis 0 (``seg`` = the static leading dim, as
-        stacked by a per-segment inner scan); ``base`` may be traced.
-        Returns a fresh ordering token."""
+        """Store slots ``[base, base+seg)`` in one callback per
+        payload-capped chunk (one total in the common case).  ``tree``
+        leaves carry the segment on axis 0 (``seg`` = the static leading
+        dim, as stacked by a per-segment inner scan); ``base`` may be
+        traced.  Returns a fresh ordering token."""
         leaves, treedef = jtu.tree_flatten(tree)
         # record PER-SLOT metadata (axis 0 stripped) under the same "idx"
         # key the adaptive write_at path records, so prefetch interoperates
@@ -379,20 +475,45 @@ class SpillStore(CheckpointStore):
                                          jnp.result_type(x))
                     for x in leaves)
         self._meta["idx"] = (treedef, sds)
-        return jax.pure_callback(self._cb_write_batch, _TOKEN_SDS, token,
-                                 base, *leaves)
+        seg = int(jnp.shape(leaves[0])[0]) if leaves else 1
+        per_slot = max((int(np.prod(s.shape, dtype=np.int64))
+                        * np.dtype(s.dtype).itemsize)
+                       for s in sds) * self.payload_scale if leaves else 0
+        m = _chunk_slots(seg, per_slot)
+        tok = token
+        for o in range(0, seg, m):
+            chunk = [x[o:o + m] for x in leaves]
+            tok = jax.pure_callback(self._cb_write_batch, _TOKEN_SDS, tok,
+                                    base + o, *chunk,
+                                    vmap_method="broadcast_all")
+        return tok
 
     def prefetch(self, token, base, seg: int):
-        """Fetch slots ``[base, base+seg)`` stacked on axis 0 in ONE
-        callback (missing slots read as zeros — the reverse sweeps
-        cond-skip or mask them).  Returns ``(token, tree)``; the fresh
+        """Fetch slots ``[base, base+seg)`` stacked on axis 0 in one
+        callback per payload-capped chunk — one total in the common case
+        (missing slots read as zeros — the reverse sweeps cond-skip or
+        mask them).  Returns ``(token, tree)``; the fresh
         token orders any later frees/overwrites after this read, and
         because the result is an ordinary traced buffer the caller can
         issue the next segment's prefetch before consuming this one
         (double buffering)."""
         treedef, sds = self._meta["idx"]
-        out_sds = (_TOKEN_SDS,) + tuple(
-            jax.ShapeDtypeStruct((seg,) + tuple(s.shape), s.dtype)
-            for s in sds)
-        out = jax.pure_callback(self._cb_prefetch(seg), out_sds, token, base)
-        return out[0], jtu.tree_unflatten(treedef, out[1:])
+        per_slot = max((int(np.prod(s.shape, dtype=np.int64))
+                        * np.dtype(s.dtype).itemsize)
+                       for s in sds) * self.payload_scale if sds else 0
+        m = _chunk_slots(seg, per_slot)
+        tok, pieces = token, []
+        for o in range(0, seg, m):
+            mm = min(m, seg - o)
+            out_sds = (_TOKEN_SDS,) + tuple(
+                jax.ShapeDtypeStruct((mm,) + tuple(s.shape), s.dtype)
+                for s in sds)
+            out = jax.pure_callback(self._cb_prefetch(mm), out_sds, tok,
+                                    base + o, vmap_method="broadcast_all")
+            tok = out[0]
+            pieces.append(out[1:])
+        if len(pieces) == 1:
+            stacked = pieces[0]
+        else:
+            stacked = [jnp.concatenate(ps, axis=0) for ps in zip(*pieces)]
+        return tok, jtu.tree_unflatten(treedef, stacked)

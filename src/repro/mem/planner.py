@@ -38,6 +38,7 @@ from typing import Any, Callable, List, Optional, Tuple
 
 from jax import tree_util as jtu
 
+from repro.core.implicit import is_implicit_method
 from repro.core.tableaus import get_tableau
 from repro.mem.model import (CostEstimate, f_activation_bytes,
                              max_fitting_ncheck, measure_reverse_cost,
@@ -62,12 +63,43 @@ class Plan:
         return self.predicted.extra_fevals
 
 
+def _solver_kw(solver_opts: Optional[dict]) -> dict:
+    """The slice of solver_opts the cost model depends on."""
+    so = solver_opts or {}
+    return dict(newton_iters=int(so.get("newton_iters", 10)),
+                gmres_iters=int(so.get("gmres_iters", 20)))
+
+
 def candidate_costs(*, method: str, n_steps: int, state_bytes: int,
                     theta_bytes: int = 0, f_act_bytes: Optional[int] = None,
-                    mem_budget: Optional[int] = None) -> List[CostEstimate]:
+                    mem_budget: Optional[int] = None,
+                    solver_opts: Optional[dict] = None
+                    ) -> List[CostEstimate]:
     """In-device candidates, cheapest recomputation first.  revolve appears
     once, at the largest N_c that fits the budget (or N_c=1 when nothing
-    does, as the minimum-memory in-device fallback)."""
+    does, as the minimum-memory in-device fallback).
+
+    Implicit methods get the implicit candidate set: pnode (converged
+    states only — already the memory floor per step), then the revolve /
+    revolve2 checkpoint-spacing points at the largest fitting N_c; the
+    AD-through-the-step policies (naive/anode/aca/pnode2) do not exist for
+    implicit solves (no reverse rule through Newton/GMRES while_loops)."""
+    if is_implicit_method(method):
+        kw = dict(method=method, n_steps=n_steps, state_bytes=state_bytes,
+                  theta_bytes=theta_bytes, **_solver_kw(solver_opts))
+        cands = [policy_cost("pnode", **kw)]
+        if n_steps >= 2:
+            k = None
+            if mem_budget is not None:
+                k = max_fitting_ncheck(mem_budget, method=method,
+                                       n_steps=n_steps,
+                                       state_bytes=state_bytes,
+                                       theta_bytes=theta_bytes,
+                                       **_solver_kw(solver_opts))
+            cands.append(policy_cost("revolve", ncheck=k if k else 1, **kw))
+            cands.append(policy_cost("revolve2", ncheck=k if k else 1, **kw))
+        cands.sort(key=lambda c: (c.extra_fevals, c.peak_bytes))
+        return cands
     kw = dict(method=method, n_steps=n_steps, state_bytes=state_bytes,
               theta_bytes=theta_bytes, f_act_bytes=f_act_bytes)
     cands = [policy_cost("naive", **kw), policy_cost("pnode", **kw)]
@@ -88,7 +120,8 @@ def plan_odeint(f: Callable, u0: PyTree, theta: PyTree, *, dt: float,
                 n_steps: int, t0: float = 0.0, method: str = "rk4",
                 mem_budget: Optional[int] = None,
                 verify: str = "measure",
-                loss_fn: Optional[Callable] = None) -> Plan:
+                loss_fn: Optional[Callable] = None,
+                solver_opts: Optional[dict] = None) -> Plan:
     """Pick (policy, ncheck, offload) for one odeint call under a budget.
 
     ``loss_fn(u_final) -> scalar``: in ``verify="measure"`` mode the
@@ -96,13 +129,22 @@ def plan_odeint(f: Callable, u0: PyTree, theta: PyTree, *, dt: float,
     training objective), so the budget check covers the loss's own working
     set too; when omitted the canonical sum-of-squares surrogate is
     measured (the pre-existing behavior).  Ignored in ``verify="model"``.
+
+    ``solver_opts`` (newton_iters/newton_tol/gmres_iters/gmres_tol) applies
+    to implicit methods: gmres_iters sets the Krylov-basis working-set
+    term of the model and both iteration counts set the recompute price of
+    a revolve segment; ``odeint_implicit(adjoint="auto")`` forwards its
+    solver configuration here.  The same budget walk and spill fallback
+    apply — the candidate set is just the implicit one (see
+    ``candidate_costs``).
     """
     if mem_budget is None:
         # no constraint: the paper's method — no recompute beyond the
         # per-stage linearizations, bounded graph depth
         est = policy_cost("pnode", method=method, n_steps=n_steps,
                           state_bytes=tree_bytes(u0),
-                          theta_bytes=tree_bytes(theta))
+                          theta_bytes=tree_bytes(theta),
+                          **_solver_kw(solver_opts))
         return Plan("pnode", None, None, est, None, True)
     if verify not in ("model", "measure"):
         raise ValueError(f"verify must be 'model' or 'measure', "
@@ -112,7 +154,8 @@ def plan_odeint(f: Callable, u0: PyTree, theta: PyTree, *, dt: float,
     fa = f_activation_bytes(f, u0, theta, t0)
     cands = candidate_costs(method=method, n_steps=n_steps,
                             state_bytes=state_bytes, theta_bytes=theta_bytes,
-                            f_act_bytes=fa, mem_budget=mem_budget)
+                            f_act_bytes=fa, mem_budget=mem_budget,
+                            solver_opts=solver_opts)
 
     measured: Optional[float] = None
     for cand in cands:
@@ -121,7 +164,8 @@ def plan_odeint(f: Callable, u0: PyTree, theta: PyTree, *, dt: float,
         if verify == "measure":
             m = measure_reverse_cost(
                 f, u0, theta, dt=dt, n_steps=n_steps, t0=t0, method=method,
-                policy=cand.policy, ncheck=cand.ncheck, loss_fn=loss_fn)["hlo_peak_bytes"]
+                policy=cand.policy, ncheck=cand.ncheck, loss_fn=loss_fn,
+                solver_opts=solver_opts)["hlo_peak_bytes"]
             if m > mem_budget:
                 continue
             measured = m
@@ -134,7 +178,8 @@ def plan_odeint(f: Callable, u0: PyTree, theta: PyTree, *, dt: float,
         for cand in cands:
             m = measure_reverse_cost(
                 f, u0, theta, dt=dt, n_steps=n_steps, t0=t0, method=method,
-                policy=cand.policy, ncheck=cand.ncheck, loss_fn=loss_fn)["hlo_peak_bytes"]
+                policy=cand.policy, ncheck=cand.ncheck, loss_fn=loss_fn,
+                solver_opts=solver_opts)["hlo_peak_bytes"]
             if m <= mem_budget:
                 return Plan(cand.policy, cand.ncheck, None, cand,
                             mem_budget, True, m, tuple(cands))
@@ -143,14 +188,15 @@ def plan_odeint(f: Callable, u0: PyTree, theta: PyTree, *, dt: float,
     # checkpoint storage off device through the spill store
     est = policy_cost("pnode", method=method, n_steps=n_steps,
                       state_bytes=state_bytes, theta_bytes=theta_bytes,
-                      f_act_bytes=fa, offload="spill")
+                      f_act_bytes=fa, offload="spill",
+                      **_solver_kw(solver_opts))
     measured = None
     fits = est.peak_bytes <= mem_budget
     if verify == "measure":
         measured = measure_reverse_cost(
             f, u0, theta, dt=dt, n_steps=n_steps, t0=t0, method=method,
-            policy="pnode", offload="spill",
-            loss_fn=loss_fn)["hlo_peak_bytes"]
+            policy="pnode", offload="spill", loss_fn=loss_fn,
+            solver_opts=solver_opts)["hlo_peak_bytes"]
         fits = measured <= mem_budget
     return Plan("pnode", None, "spill", est, mem_budget, fits, measured,
                 tuple(cands))

@@ -124,6 +124,79 @@ def test_gradient_matches_ad_through_solver():
     np.testing.assert_allclose(g1, g2, rtol=1e-7, atol=1e-9)
 
 
+def test_nonconvergence_surfaces_diverged_flag():
+    """A deliberately starved Newton solve must surface stats.diverged
+    instead of silently returning garbage states/gradients (the pre-stats
+    implicit_step exited on newton_iters with no report)."""
+    def f(u, th, t):
+        return jnp.tanh(th @ u) - 0.5 * u
+
+    d = 4
+    th = 0.5 * jax.random.normal(jax.random.PRNGKey(1), (d, d))
+    u0 = jax.random.normal(jax.random.PRNGKey(2), (d,))
+
+    # starved: one Newton iteration against an unreachable tolerance
+    _, stats = odeint_implicit(f, u0, th, dt=0.2, n_steps=5, method="cn",
+                               newton_iters=1, newton_tol=1e-16,
+                               return_stats=True)
+    assert bool(stats.diverged)
+    assert float(stats.max_residual) > 1e-16
+
+    # healthy solve on the same problem: converged, with a real iter count
+    _, stats = odeint_implicit(f, u0, th, dt=0.2, n_steps=5, method="cn",
+                               return_stats=True)
+    assert not bool(stats.diverged)
+    assert float(stats.max_residual) <= 1e-9
+    assert int(stats.newton_iters) >= 5  # at least one iteration per step
+
+
+def test_stats_flow_through_policies_jit_and_grad():
+    """Every checkpoint policy threads the same stats out of its scan, under
+    jit too, and taking grad of a loss alongside return_stats works (the
+    stats outputs are non-differentiable auxiliaries)."""
+    def f(u, th, t):
+        return jnp.tanh(th @ u) - 0.5 * u
+
+    d = 3
+    th = 0.5 * jax.random.normal(jax.random.PRNGKey(1), (d, d))
+    u0 = jax.random.normal(jax.random.PRNGKey(2), (d,))
+
+    ref = None
+    for kw in ({}, {"adjoint": "revolve", "ncheck": 2},
+               {"adjoint": "revolve2", "ncheck": 2},
+               {"adjoint": "pnode", "offload": "spill"}):
+        uf, stats = jax.jit(lambda u, t: odeint_implicit(
+            f, u, t, dt=0.2, n_steps=5, method="beuler",
+            return_stats=True, **kw))(u0, th)
+        assert not bool(stats.diverged), kw
+        if ref is None:
+            ref = stats
+        else:  # forward sweeps are identical -> identical reports
+            assert int(stats.newton_iters) == int(ref.newton_iters), kw
+            np.testing.assert_array_equal(np.asarray(stats.max_residual),
+                                          np.asarray(ref.max_residual))
+
+    def loss(th_):
+        uf, stats = odeint_implicit(f, u0, th_, dt=0.2, n_steps=5,
+                                    method="beuler", return_stats=True)
+        return jnp.sum(uf ** 2)
+
+    g = jax.grad(loss)(th)
+    g_plain = jax.grad(lambda th_: jnp.sum(odeint_implicit(
+        f, u0, th_, dt=0.2, n_steps=5, method="beuler") ** 2))(th)
+    np.testing.assert_array_equal(np.asarray(g), np.asarray(g_plain))
+
+
+def test_implicit_step_reports_stepinfo():
+    def f(u, th, t):
+        return -th * u
+
+    v, info = implicit_step(f, jnp.ones(2), jnp.float64(3.0), 0.0, 0.1, 1.0)
+    assert bool(info.converged)
+    assert int(info.iters) >= 1
+    assert float(info.residual) <= 1e-9
+
+
 def test_mass_matrix_form():
     """M u' = f with non-identity mass matrix (eq. 11/12)."""
     d = 3

@@ -1,0 +1,256 @@
+"""The implicit half of the memory stack: planner contract (property-based,
+mirroring tests/test_mem.py's explicit contract), vmapped spill I/O, and an
+end-to-end stiff-ensemble training run under a byte budget.
+
+Property tests run against the analytic model only (no compilation), via
+real hypothesis when importable or the offline stub fallback.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # hermetic container: deterministic offline fallback
+    from tests._hypothesis_stub import given, settings, st
+
+from repro.core.implicit import (IMPLICIT_POLICIES, implicit_nfe_backward,
+                                 odeint_implicit)
+from repro.mem.model import max_fitting_ncheck, policy_cost
+from repro.mem.offload import reset_spill_stats, spill_stats
+from repro.mem.planner import candidate_costs, plan_odeint
+
+jax.config.update("jax_enable_x64", True)
+
+S, TH = 48, 288  # state / theta bytes of the canonical d=6 f64 problem
+
+
+def _vf():
+    def f(u, th, t):
+        return jnp.tanh(th @ u) - 0.5 * u
+    return f
+
+
+def _problem(d=6, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    u0 = jax.random.normal(ks[0], (d,))
+    th = 0.4 * jax.random.normal(ks[1], (d, d))
+    return u0, th
+
+
+# ---------------------------------------------------------------------------
+# planner model contract (property-based)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40)
+@given(n=st.integers(2, 80), extra=st.integers(1, 40),
+       method=st.sampled_from(["cn", "beuler"]),
+       policy=st.sampled_from(list(IMPLICIT_POLICIES)))
+def test_predicted_peak_monotone_in_n_steps(n, extra, method, policy):
+    """More steps can never shrink the predicted peak (pnode stores more
+    states; revolve at fixed ncheck keeps storage flat, never less), and
+    NFE-B is strictly monotone in n_steps for every policy."""
+    kw = dict(method=method, state_bytes=S, theta_bytes=TH)
+    nck = {"ncheck": 1} if policy != "pnode" else {}
+    a = policy_cost(policy, n_steps=n, **nck, **kw)
+    b = policy_cost(policy, n_steps=n + extra, **nck, **kw)
+    assert b.peak_bytes >= a.peak_bytes
+    assert b.extra_fevals > a.extra_fevals
+
+
+@settings(max_examples=40)
+@given(n=st.integers(4, 60), k=st.integers(1, 30), dk=st.integers(1, 20),
+       method=st.sampled_from(["cn", "beuler"]))
+def test_revolve_ncheck_tradeoff_monotone(n, k, dk, method):
+    """The Prop-2 trade for implicit revolve: more checkpoint slots never
+    increase recompute (NFE-B nonincreasing in ncheck) and never shrink
+    storage (peak nondecreasing) — so the planner's pick-the-largest-
+    fitting-ncheck rule is optimal."""
+    k2 = k + dk
+    if k2 >= n:
+        return
+    kw = dict(method=method, n_steps=n, state_bytes=S, theta_bytes=TH)
+    a = policy_cost("revolve", ncheck=k, **kw)
+    b = policy_cost("revolve", ncheck=k2, **kw)
+    assert b.extra_fevals <= a.extra_fevals
+    assert b.peak_bytes >= a.peak_bytes
+
+
+@settings(max_examples=40)
+@given(n=st.integers(2, 60), budget_kb=st.integers(1, 64),
+       method=st.sampled_from(["cn", "beuler"]))
+def test_plan_fits_budget_model_mode(n, budget_kb, method):
+    """Model-mode contract: whenever the plan claims to fit, its predicted
+    peak is within budget; when no in-device candidate fits, the fallback
+    is the spill tier (never a silently over-budget device plan)."""
+    f = _vf()
+    u0, th = _problem()
+    budget = budget_kb * 1024
+    plan = plan_odeint(f, u0, th, dt=0.1, n_steps=n, method=method,
+                       mem_budget=budget, verify="model")
+    if plan.fits:
+        assert plan.predicted.peak_bytes <= budget
+    if plan.offload is None:
+        assert plan.policy in IMPLICIT_POLICIES
+        assert plan.fits
+    else:
+        assert plan.offload == "spill"
+    # the chosen plan is recompute-minimal among fitting candidates
+    for cand in plan.candidates:
+        if cand.peak_bytes <= budget and plan.offload is None:
+            assert plan.extra_fevals <= cand.extra_fevals
+
+
+@settings(max_examples=25)
+@given(n=st.integers(3, 50), method=st.sampled_from(["cn", "beuler"]),
+       ni=st.integers(1, 12), gi=st.integers(2, 30))
+def test_max_fitting_ncheck_consistent(n, method, ni, gi):
+    """max_fitting_ncheck's answer actually fits, and one more slot does
+    not (or is out of range) — with the implicit S-bytes-per-slot model."""
+    kw = dict(method=method, n_steps=n, state_bytes=S, theta_bytes=TH,
+              newton_iters=ni, gmres_iters=gi)
+    probe = policy_cost("revolve", ncheck=1, **kw)
+    budget = probe.peak_bytes + 3 * S  # room for a few more slots
+    k = max_fitting_ncheck(budget, method=method, n_steps=n, state_bytes=S,
+                           theta_bytes=TH, newton_iters=ni, gmres_iters=gi)
+    assert k is not None and 1 <= k <= n - 1
+    assert policy_cost("revolve", ncheck=k, **kw).peak_bytes <= budget
+    if k < n - 1:
+        assert policy_cost("revolve", ncheck=k + 1,
+                           **kw).peak_bytes > budget
+
+
+def test_candidates_implicit_family_only():
+    cands = candidate_costs(method="cn", n_steps=20, state_bytes=S,
+                            theta_bytes=TH, mem_budget=10 ** 6)
+    names = {c.policy for c in cands}
+    assert names <= set(IMPLICIT_POLICIES)
+    assert "pnode" in names and "revolve" in names
+    assert all(c.reverse_accurate for c in cands)
+
+
+def test_invalid_ncheck_valueerrors():
+    f = _vf()
+    u0, th = _problem()
+    kw = dict(dt=0.1, n_steps=8, method="cn", adjoint="revolve")
+    with pytest.raises(ValueError, match="positive"):
+        odeint_implicit(f, u0, th, ncheck=0, **kw)
+    with pytest.raises(ValueError, match="positive"):
+        odeint_implicit(f, u0, th, ncheck=-3, **kw)
+    with pytest.raises(ValueError, match="n_steps"):
+        odeint_implicit(f, u0, th, ncheck=8, **kw)
+    with pytest.raises(ValueError, match="auto"):
+        odeint_implicit(f, u0, th, **kw)  # ncheck omitted
+    with pytest.raises(ValueError, match="naive"):
+        odeint_implicit(f, u0, th, dt=0.1, n_steps=8, method="cn",
+                        adjoint="naive")
+    with pytest.raises(ValueError, match="auto"):
+        odeint_implicit(f, u0, th, dt=0.1, n_steps=8, method="cn",
+                        mem_budget=100)
+
+
+def test_nfe_model_policy_ordering():
+    """pnode is the implicit NFE-B floor; checkpoint spacing only adds
+    Newton-solve recompute on top of it."""
+    base = implicit_nfe_backward(30, "pnode")
+    assert implicit_nfe_backward(30, "revolve", ncheck=3) > base
+    assert implicit_nfe_backward(30, "revolve2", ncheck=3) > base
+    assert implicit_nfe_backward(30, "revolve", ncheck=29) == base
+
+
+# ---------------------------------------------------------------------------
+# measured acceptance (compiles a few reverse passes; mirrors test_mem.py)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", ["cn", "beuler"])
+def test_auto_measured_peak_fits_budget(method):
+    """verify='measure' acceptance for the implicit family: set the budget
+    to the measured peak of a known-good anchor; the plan must fit and its
+    measured bytes must be within budget."""
+    f = _vf()
+    u0, th = _problem()
+    so = dict(newton_iters=5, gmres_iters=8)
+    from repro.mem.model import measure_reverse_cost
+    anchor = measure_reverse_cost(f, u0, th, dt=0.1, n_steps=8,
+                                  method=method, policy="pnode",
+                                  solver_opts=so)["hlo_peak_bytes"]
+    plan = plan_odeint(f, u0, th, dt=0.1, n_steps=8, method=method,
+                       mem_budget=int(anchor), verify="measure",
+                       solver_opts=so)
+    assert plan.fits
+    assert plan.measured_bytes is not None
+    assert plan.measured_bytes <= anchor
+
+
+# ---------------------------------------------------------------------------
+# vmap + spill: the per-batch-element key scheme
+# ---------------------------------------------------------------------------
+
+def test_vmap_spill_bitwise_and_callback_counts():
+    """A vmapped implicit solve with spill offload must (a) produce
+    gradients bitwise-identical to the vmapped in-device solve and (b) pay
+    ONE host callback per checkpoint segment for the entire batch (the
+    batched callbacks carry all elements; no per-element round-trips)."""
+    f = _vf()
+    B, d, n = 5, 4, 7
+    th = 0.4 * jax.random.normal(jax.random.PRNGKey(1), (d, d))
+    u0s = jax.random.normal(jax.random.PRNGKey(2), (B, d))
+
+    def batched_grad(offload):
+        def loss(u, t):
+            sol = jax.vmap(lambda u0: odeint_implicit(
+                f, u0, t, dt=0.2, n_steps=n, method="cn", newton_iters=8,
+                adjoint="pnode", offload=offload))(u)
+            return jnp.sum(sol ** 2)
+        return jax.jit(jax.grad(loss, argnums=(0, 1)))
+
+    g_dev = batched_grad(None)(u0s, th)
+    reset_spill_stats()
+    g_spl = batched_grad("spill")(u0s, th)
+    jax.block_until_ready(g_spl)
+    stats = spill_stats()
+
+    for a, b in zip(jax.tree_util.tree_leaves(g_spl),
+                    jax.tree_util.tree_leaves(g_dev)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # default segment for n=7 is 3 -> ceil(7/3)=3 callbacks each way,
+    # n slots each way, regardless of B
+    assert stats["write_cb"] == 3 and stats["read_cb"] == 3
+    assert stats["write_slots"] == n and stats["read_slots"] == n
+
+
+def test_vmap_rejected_for_slot_addressed_offload():
+    f = _vf()
+    u0, th = _problem(d=3)
+    u0s = jnp.stack([u0, u0 + 1.0])
+    with pytest.raises(NotImplementedError, match="vmap"):
+        jax.vmap(lambda u: odeint_implicit(
+            f, u, th[:3, :3], dt=0.1, n_steps=6, method="cn",
+            adjoint="revolve", ncheck=2, offload="spill"))(u0s)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: train the stiff ensemble under a byte budget
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_stiff_ensemble_trains_under_budget():
+    """A small version of benchmarks/stiff_ensemble.py: vmapped
+    Robertson-style systems trained for a few steps under a budget that
+    forces the spill tier; loss must decrease and the executed tier must
+    match the plan (spill callbacks actually fired)."""
+    import pathlib
+    import sys
+    root = str(pathlib.Path(__file__).resolve().parents[1])
+    if root not in sys.path:  # benchmarks/ is a namespace pkg at repo root
+        sys.path.insert(0, root)
+    from benchmarks.stiff_ensemble import run_ensemble
+
+    rec = run_ensemble(batch=64, n_steps=12, train_steps=4)
+    assert rec["plan"]["offload"] == "spill"
+    assert rec["effective_tier"] == "spill"
+    assert rec["callbacks_per_grad"] > 0
+    assert rec["diverged_fraction"] == 0.0
+    assert rec["losses"][-1] < rec["losses"][0]
