@@ -31,13 +31,14 @@ from pathlib import Path
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import fmt_row
 from repro.core.adaptive import odeint_adaptive
 from repro.core.adjoint import adjoint_stages, odeint
 from repro.mem.offload import (default_segment, reset_spill_stats,
                                spill_stats)
+from repro.obs import (DEFAULT_REGISTRY, BaselineRef, FevalCounter, Gate,
+                       check_against_baseline as _obs_check)
 
 BASELINE_PATH = Path(__file__).resolve().parent / "bench3_baseline.json"
 
@@ -55,31 +56,6 @@ def _problem():
         return jnp.tanh(u @ theta["w1"]) @ theta["w2"]
 
     return f, u0, th
-
-
-class FevalCounter:
-    """Wrap a vector field so each runtime evaluation bumps a host counter
-    (identity pure_callback on t — on the non-diff path, so the wrapped f
-    linearizes exactly like the original).  Only trustworthy under jit:
-    compiled programs execute the callback faithfully, the eager
-    tracing path may constant-fold it away (jax 0.4.37).  The wrapped f
-    must actually USE t, or XLA dead-codes the tap."""
-
-    def __init__(self, f):
-        self.count = 0
-        self._f = f
-
-    def reset(self):
-        self.count = 0
-
-    def __call__(self, u, theta, t):
-        def tap(tt):
-            self.count += 1
-            return np.asarray(tt)
-
-        t2 = jax.pure_callback(
-            tap, jax.ShapeDtypeStruct(jnp.shape(t), jnp.result_type(t)), t)
-        return self._f(u, theta, t2)
 
 
 def _timeit(fn, *args, repeat: int = 3) -> float:
@@ -260,45 +236,38 @@ def bench_fused() -> dict:
     return rows
 
 
+#: BENCH_3 regression gates, declared as data and evaluated by the
+#: unified ``repro.obs.baseline`` checker (same machinery as BENCH_4) —
+#: the CI guard for the batched-I/O win.
+GATES = [
+    Gate("smoke_config", "spill_io.n_steps", "==",
+         BaselineRef("smoke_n_steps"), precondition=True,
+         message="callback counts scale with problem size; the baseline "
+                 "is recorded for the --smoke configuration — re-run "
+                 "with --smoke to compare against it"),
+    Gate("spill_callbacks", "spill_io.callbacks_per_reverse_pass", "<=",
+         BaselineRef("spill_io_callbacks_per_reverse_pass"),
+         message="segment-batched reverse-pass host callbacks regressed"),
+    Gate("spill_bitwise", "spill_io.grads_bitwise_identical", "truthy",
+         message="spill grads no longer bitwise-identical to device"),
+    Gate("adaptive_masked", "adaptive.reverse_scales_with_accepted",
+         "truthy",
+         message="adaptive reverse NFE exceeds sa*(n_accepted+1)"),
+    Gate("adaptive_invariant", "adaptive.invariant_in_max_steps", "truthy",
+         message="adaptive reverse NFE grew with max_steps"),
+    Gate("adaptive_prefetch", "adaptive.spill_prefetch_cb", "<=",
+         BaselineRef("adaptive_spill_prefetch_cb_max"),
+         message="adaptive prefetch callbacks regressed"),
+    Gate("fused_bitwise", "fused.*.grads_bitwise_identical", "truthy",
+         message="fused_stages grads diverged"),
+]
+
+
 def check_against_baseline(record: dict) -> list[str]:
-    """Fail (return messages) if host-callback counts regress vs the
-    recorded baseline — the CI guard for the batched-I/O win."""
-    if not BASELINE_PATH.exists():
-        return [f"baseline file missing: {BASELINE_PATH}"]
-    base = json.loads(BASELINE_PATH.read_text())
-    if record["spill_io"]["n_steps"] != base["smoke_n_steps"]:
-        # callback counts scale with the problem size; the baseline is
-        # recorded for the --smoke configuration CI runs
-        return [f"baseline is recorded for the --smoke configuration "
-                f"(n_steps={base['smoke_n_steps']}); re-run with --smoke "
-                f"to compare against it"]
-    errs = []
-    cur = record["spill_io"]["callbacks_per_reverse_pass"]
-    ref = base["spill_io_callbacks_per_reverse_pass"]
-    if cur > ref:
-        errs.append(f"spill reverse-pass callbacks regressed: {cur} > "
-                    f"baseline {ref}")
-    if not record["spill_io"]["grads_bitwise_identical"]:
-        errs.append("spill grads no longer bitwise-identical to device")
-    ad = record["adaptive"]
-    if not ad["reverse_scales_with_accepted"]:
-        errs.append(
-            f"adaptive reverse NFE {ad['reverse_fevals']} exceeds "
-            f"sa*(n_accepted+1)={ad['reverse_fevals_bound']}")
-    if not ad["invariant_in_max_steps"]:
-        errs.append(
-            f"adaptive reverse NFE grew with max_steps: "
-            f"{ad['grad_fevals_at_max_steps']} -> "
-            f"{ad['grad_fevals_at_2x_max_steps']}")
-    if ad["spill_prefetch_cb"] > base["adaptive_spill_prefetch_cb_max"]:
-        errs.append(
-            f"adaptive prefetch callbacks regressed: "
-            f"{ad['spill_prefetch_cb']} > "
-            f"baseline {base['adaptive_spill_prefetch_cb_max']}")
-    for method, row in record["fused"].items():
-        if not row["grads_bitwise_identical"]:
-            errs.append(f"fused_stages grads diverged for {method}")
-    return errs
+    """Evaluate the BENCH_3 gates against the recorded baseline via the
+    unified obs checker; returns failure messages (empty == pass)."""
+    return _obs_check(record, GATES, BASELINE_PATH, bench="hotpath",
+                      registry=DEFAULT_REGISTRY)
 
 
 def main(smoke: bool = False, out_path: str = "BENCH_3.json",

@@ -21,10 +21,42 @@ def main() -> None:
 
     if "--smoke" in sys.argv:
         from benchmarks import hotpath, mem_plan, stiff_ensemble
+        from repro.obs import DEFAULT_REGISTRY, MetricsSink
         t0 = time.time()
-        mem_plan.main(smoke=True)
-        hotpath.main(smoke=True, check=True)
-        stiff_ensemble.main(smoke=True, check=True)
+        # METRICS.jsonl: per-section structured records + the unified
+        # baseline-gate counters, uploaded as a CI artifact.  The sink
+        # flushes per record, so a failing gate (SystemExit) still leaves
+        # every completed section's record on disk.
+        with MetricsSink("METRICS.jsonl") as sink:
+            mem_plan.main(smoke=True)
+            sink.emit("bench.section", section="mem_plan",
+                      elapsed_s=time.time() - t0)
+            t1 = time.time()
+            rec3 = hotpath.main(smoke=True, check=True)
+            sink.emit(
+                "bench.section", section="hotpath",
+                elapsed_s=time.time() - t1,
+                callbacks_per_reverse_pass=rec3["spill_io"][
+                    "callbacks_per_reverse_pass"],
+                spill_grads_bitwise=rec3["spill_io"][
+                    "grads_bitwise_identical"],
+                reverse_fevals=rec3["adaptive"]["reverse_fevals"],
+                nfe_invariant_in_max_steps=rec3["adaptive"][
+                    "invariant_in_max_steps"])
+            t2 = time.time()
+            rec4 = stiff_ensemble.main(smoke=True, check=True)
+            sink.emit(
+                "bench.section", section="stiff_ensemble",
+                elapsed_s=time.time() - t2,
+                callbacks_per_grad=rec4["callbacks_per_grad"],
+                nfe_backward=rec4["plan"]["nfe_backward"],
+                grads_bitwise_vs_device=rec4["grads_bitwise_vs_device"],
+                diverged_fraction=rec4["diverged_fraction"],
+                losses=rec4["losses"])
+            sink.emit("bench.gates",
+                      **{k: v for k, v in
+                         DEFAULT_REGISTRY.snapshot()["counters"].items()
+                         if k.startswith("baseline.")})
         print(f"\n== bench smoke done in {time.time()-t0:.1f}s ==")
         return
 

@@ -42,6 +42,8 @@ from repro.core.implicit import odeint_implicit
 from repro.mem.model import tree_bytes
 from repro.mem.offload import default_segment, reset_spill_stats, spill_stats
 from repro.mem.planner import candidate_costs, plan_odeint
+from repro.obs import (DEFAULT_REGISTRY, BaselineRef, Gate,
+                       check_against_baseline as _obs_check)
 from repro.optim.adamw import AdamW
 
 # Robertson kinetics: u1' = -k1 u1 + k3 u2 u3, u2' = k1 u1 - k3 u2 u3
@@ -163,36 +165,38 @@ def run_ensemble(batch=1024, n_steps=30, train_steps=5, dt=0.01, lr=0.05,
     }
 
 
+#: BENCH_4 regression gates, declared as data and evaluated by the
+#: unified ``repro.obs.baseline`` checker (same machinery as BENCH_3).
+GATES = [
+    Gate("ensemble_size", "ensemble", ">=", BaselineRef("min_ensemble"),
+         message="ensemble shrank below the recorded minimum"),
+    Gate("spill_callbacks", "callbacks_per_grad", "<=",
+         BaselineRef("max_callbacks_per_grad"),
+         message="host callbacks per grad regressed"),
+    Gate("nfe_backward", "plan.nfe_backward", "<=",
+         BaselineRef("max_nfe_backward"), message="NFE-B regressed"),
+    Gate("plan_spill", "plan.offload", "==", "spill",
+         message="planner stopped selecting spill under the budget"),
+    Gate("effective_spill", "effective_tier", "==", "spill",
+         message="spill tier planned but no spill callbacks executed"),
+    Gate("grads_bitwise", "grads_bitwise_vs_device", "truthy",
+         message="spill gradients are not bitwise-identical to the "
+                 "in-device gradients"),
+    Gate("newton_converged", "diverged_fraction", "<=", 0.0,
+         message="some of the ensemble's Newton solves diverged"),
+    Gate("training", "loss_decreased", "truthy",
+         message="training loss did not decrease"),
+]
+
+
 def check_against_baseline(rec, baseline_path="benchmarks/"
                            "bench4_baseline.json"):
     """Regression gates for CI; returns a list of error strings."""
-    with open(baseline_path) as fh:
-        base = json.load(fh)
-    errs = []
-    if rec["ensemble"] < base["min_ensemble"]:
-        errs.append(f"ensemble {rec['ensemble']} < "
-                    f"min {base['min_ensemble']}")
-    if rec["callbacks_per_grad"] > base["max_callbacks_per_grad"]:
-        errs.append(f"host callbacks per grad regressed: "
-                    f"{rec['callbacks_per_grad']} > "
-                    f"{base['max_callbacks_per_grad']}")
-    if rec["plan"]["nfe_backward"] > base["max_nfe_backward"]:
-        errs.append(f"NFE-B regressed: {rec['plan']['nfe_backward']} > "
-                    f"{base['max_nfe_backward']}")
-    if rec["plan"]["offload"] != "spill":
-        errs.append(f"planner stopped selecting spill under the budget: "
-                    f"{rec['plan']}")
-    if rec["effective_tier"] != "spill":
-        errs.append("spill tier planned but no spill callbacks executed")
-    if not rec["grads_bitwise_vs_device"]:
-        errs.append("spill gradients are not bitwise-identical to the "
-                    "in-device gradients")
-    if rec["diverged_fraction"] > 0.0:
-        errs.append(f"{rec['diverged_fraction']:.3%} of the ensemble's "
-                    "Newton solves diverged")
-    if not rec["losses"][-1] < rec["losses"][0]:
-        errs.append(f"training loss did not decrease: {rec['losses']}")
-    return errs
+    # derived field the declarative gate reads (first vs final loss)
+    rec = dict(rec,
+               loss_decreased=bool(rec["losses"][-1] < rec["losses"][0]))
+    return _obs_check(rec, GATES, baseline_path, bench="stiff_ensemble",
+                      registry=DEFAULT_REGISTRY)
 
 
 def main(smoke=False, out_path="BENCH_4.json", check=False):
@@ -211,6 +215,7 @@ def main(smoke=False, out_path="BENCH_4.json", check=False):
                 print(f"BENCH_4 REGRESSION: {e}", file=sys.stderr)
             raise SystemExit(1)
         print("BENCH_4: all regression gates passed")
+    return rec
 
 
 if __name__ == "__main__":

@@ -55,6 +55,7 @@ from repro.core.integrators import (
     tree_zeros_like,
 )
 from repro.core.tableaus import DOPRI5, get_tableau
+from repro.obs.profile import scope
 
 
 class AdaptiveInfo(NamedTuple):
@@ -81,13 +82,23 @@ def odeint_adaptive(f: VectorField, u0: PyTree, theta: PyTree, *,
                     h0: float | None = None, method: str = "dopri5",
                     offload: str | None = None,
                     offload_segment: int | None = None,
-                    fused_stages: bool = False):
+                    fused_stages: bool = False,
+                    obs=None):
     """Adaptive solve from t0 to t1; differentiable (discrete adjoint over
     accepted steps).  Returns (u_final, AdaptiveInfo).  ``offload="spill"``
     replaces the preallocated ring buffer with a host-side checkpoint store
     whose reverse sweep prefetches ``offload_segment`` slots per host
     callback (default ceil(sqrt(max_steps))); ``fused_stages`` selects the
-    Pallas stage-fusion kernels (see module docstring)."""
+    Pallas stage-fusion kernels (see module docstring).
+
+    ``obs=`` attaches a ``repro.obs.FlightRecorder``: every *attempted*
+    step emits a runtime ``adaptive.step`` event (t, h, error norm,
+    accept, and the attempt counter — ``FlightRecorder.adaptive_steps()``
+    reconstructs the exact accepted/rejected sequence from them), and the
+    spill store's callbacks record per-segment ``spill.*`` traffic.  The
+    taps are ``jax.debug.callback`` effects: no op feeds the computation,
+    so gradients are bitwise-identical to ``obs=None`` (which traces no
+    tap at all — zero overhead when off)."""
     if method != "dopri5":
         raise ValueError("adaptive integration currently supports dopri5")
     if offload not in (None, "device", "spill"):
@@ -109,24 +120,32 @@ def odeint_adaptive(f: VectorField, u0: PyTree, theta: PyTree, *,
                    else default_segment(int(max_steps)))
         segment = max(1, min(segment, int(max_steps)))
     h_init = float(h0) if h0 is not None else (float(t1) - float(t0)) / 100.0
+    if obs is not None:
+        if store is not None:
+            store.bind_obs(obs)
+        obs.record("adaptive.solve", method=method, t0=float(t0),
+                   t1=float(t1), rtol=float(rtol), atol=float(atol),
+                   max_steps=int(max_steps), h0=h_init,
+                   offload=offload, segment=segment,
+                   fused=bool(fused_stages))
     u_final, info = _odeint_adaptive(f, float(t0), float(t1), float(rtol),
                                      float(atol), int(max_steps),
                                      float(h_init), store, segment,
-                                     bool(fused_stages), u0, theta)
+                                     bool(fused_stages), obs, u0, theta)
     return u_final, info
 
 
 @functools.partial(jax.custom_vjp,
-                   nondiff_argnums=(0, 1, 2, 3, 4, 5, 6, 7, 8, 9))
+                   nondiff_argnums=(0, 1, 2, 3, 4, 5, 6, 7, 8, 9, 10))
 def _odeint_adaptive(f, t0, t1, rtol, atol, max_steps, h0, store, segment,
-                     fused, u0, theta):
+                     fused, obs, u0, theta):
     out, _res = _adaptive_fwd_solve(f, t0, t1, rtol, atol, max_steps, h0,
-                                    store, fused, u0, theta)
+                                    store, fused, u0, theta, obs=obs)
     return out
 
 
 def _adaptive_fwd_solve(f, t0, t1, rtol, atol, max_steps, h0, store, fused,
-                        u0, theta):
+                        u0, theta, obs=None):
     tab = DOPRI5
     s = tab.num_stages
     order = tab.order
@@ -166,6 +185,12 @@ def _adaptive_fwd_solve(f, t0, t1, rtol, atol, max_steps, h0, store, fused,
             err = term if err is None else tree_add(err, term)
         enorm = _error_norm(u, u_new, err, rtol, atol)
         accept = enorm <= 1.0
+        if obs is not None:
+            # debug-effect tap only — nothing feeds the computation, so
+            # the solve (and its gradients) is bitwise-unchanged; the
+            # attempt counter makes the event stream order-reconstructible
+            obs.emit("adaptive.step", t=t, h=h, err_norm=enorm,
+                     accept=accept, attempt=n_acc + n_rej)
 
         # PI controller (Hairer-Norsett-Wanner II.4): alpha=0.7/p, beta=0.4/p
         alpha, beta = 0.7 / order, 0.4 / order
@@ -206,16 +231,22 @@ def _adaptive_fwd_solve(f, t0, t1, rtol, atol, max_steps, h0, store, fused,
     return (u_f, info), (bufs, n_acc, theta)
 
 
+@scope("adaptive/fwd")
 def _odeint_adaptive_fwd(f, t0, t1, rtol, atol, max_steps, h0, store,
-                         segment, fused, u0, theta):
+                         segment, fused, obs, u0, theta):
     out, res = _adaptive_fwd_solve(f, t0, t1, rtol, atol, max_steps, h0,
-                                   store, fused, u0, theta)
+                                   store, fused, u0, theta, obs=obs)
     return out, res
 
 
+@scope("adaptive/bwd")
 def _odeint_adaptive_bwd(f, t0, t1, rtol, atol, max_steps, h0, store,
-                         segment, fused, res, g):
+                         segment, fused, obs, res, g):
     tab = DOPRI5
+    if obs is not None:
+        obs.record("adaptive.adjoint", max_steps=max_steps,
+                   segment=segment,
+                   tier="spill" if store is not None else "device")
     bufs, n_acc, theta = res
     g_u, _g_info = g  # ignore cotangents of the counters
     spill = store is not None

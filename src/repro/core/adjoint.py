@@ -52,6 +52,7 @@ import jax
 import jax.numpy as jnp
 from jax import tree_util as jtu
 
+from repro.obs.profile import scope
 from repro.core import revolve as revolve_mod
 from repro.core.integrators import (
     PyTree,
@@ -155,7 +156,8 @@ def odeint(f: VectorField, u0: PyTree, theta: PyTree, *, dt: float,
            offload: str | None = None, offload_segment: int | None = None,
            mem_budget: int | None = None,
            mem_verify: str = "measure",
-           fused_stages: bool = False) -> PyTree:
+           fused_stages: bool = False,
+           obs=None) -> PyTree:
     """Fixed-step ODE solve, differentiable with the selected adjoint policy.
 
     ``adjoint="auto"`` with ``mem_budget=<bytes>`` delegates the policy (and
@@ -177,6 +179,15 @@ def odeint(f: VectorField, u0: PyTree, theta: PyTree, *, dt: float,
     the low-level-AD policies differentiate through the step graph and
     Pallas calls have no AD rules; ``adjoint="auto"`` drops the flag
     silently if the planner picks such a policy.
+
+    ``obs=`` attaches a ``repro.obs.FlightRecorder``: the solve records a
+    trace-time ``odeint.solve`` configuration event and binds the
+    checkpoint store to the recorder, so every store put/get/free
+    (trace-time schedule, device/host tiers) and every spill callback
+    (runtime, with payload bytes) lands in the trace.  ``obs=None``
+    (default) is zero-overhead — the traced program is identical, so
+    gradients with a recorder attached are bitwise-identical to the
+    unobserved solve.
     """
     n_steps = int(n_steps)
     if n_steps < 1:
@@ -233,6 +244,12 @@ def odeint(f: VectorField, u0: PyTree, theta: PyTree, *, dt: float,
                 f"offload_segment must be >= 1, got {offload_segment}")
     if offloaded:
         _reject_vmap_offload(u0, theta, "odeint")
+    if obs is not None:
+        obs.record("odeint.solve", method=method, adjoint=adjoint,
+                   n_steps=n_steps, dt=float(dt), t0=float(t0),
+                   ncheck=None if ncheck is None else int(ncheck),
+                   offload=offload, fused=fused,
+                   planned=from_auto)
     if adjoint == "naive":
         u_final, _ = solve_fixed(f, method, u0, theta, t0, dt, n_steps)
         return u_final
@@ -240,6 +257,8 @@ def odeint(f: VectorField, u0: PyTree, theta: PyTree, *, dt: float,
         ncheck = _validate_ncheck(adjoint, ncheck, n_steps)
         from repro.mem.offload import make_store  # deferred: import cycle
         store = make_store(offload)
+        if obs is not None:
+            store.bind_obs(obs)
         impl = _odeint_revolve if adjoint == "revolve" else _odeint_revolve2
         return impl(f, method, float(t0), float(dt), n_steps, ncheck,
                     store, fused, u0, theta)
@@ -252,8 +271,11 @@ def odeint(f: VectorField, u0: PyTree, theta: PyTree, *, dt: float,
         from repro.mem.offload import default_segment, make_store
         segment = (offload_segment if offload_segment is not None
                    else default_segment(n_steps))
+        store = make_store("spill")
+        if obs is not None:
+            store.bind_obs(obs)
         return _odeint_pnode_spill(f, method, float(t0), float(dt), n_steps,
-                                   make_store("spill"), min(segment, n_steps),
+                                   store, min(segment, n_steps),
                                    fused, u0, theta)
     return _odeint_cv(f, method, float(t0), float(dt), int(n_steps),
                       adjoint, fused, u0, theta)
@@ -348,6 +370,7 @@ def _odeint_cv(f, method, t0, dt, n_steps, policy, fused, u0, theta):
     return u_final
 
 
+@scope("adjoint/fwd")
 def _odeint_cv_fwd(f, method, t0, dt, n_steps, policy, fused, u0, theta):
     if policy == "continuous":
         u_final, _ = solve_fixed(f, method, u0, theta, t0, dt, n_steps)
@@ -367,6 +390,7 @@ def _odeint_cv_fwd(f, method, t0, dt, n_steps, policy, fused, u0, theta):
     raise ValueError(policy)
 
 
+@scope("adjoint/bwd")
 def _odeint_cv_bwd(f, method, t0, dt, n_steps, policy, fused, res, g):
     tab = get_tableau(method)
 
@@ -486,6 +510,7 @@ def _advance_segment(f, tab, u, theta, t_start_idx, n, t0, dt, fused=False):
     return u_out
 
 
+@scope("revolve/fwd")
 def _odeint_revolve_fwd(f, method, t0, dt, n_steps, ncheck, store, fused, u0,
                         theta):
     tab = get_tableau(method)
@@ -502,6 +527,7 @@ def _odeint_revolve_fwd(f, method, t0, dt, n_steps, ncheck, store, fused, u0,
     return u, (store.pack(), theta)
 
 
+@scope("revolve/bwd")
 def _odeint_revolve_bwd(f, method, t0, dt, n_steps, ncheck, store, fused, res,
                         g):
     tab = get_tableau(method)
@@ -578,6 +604,7 @@ def _segment_bounds(n_steps: int, ncheck: int):
     return list(zip(positions, positions[1:] + [n_steps]))
 
 
+@scope("revolve2/fwd")
 def _odeint_revolve2_fwd(f, method, t0, dt, n_steps, ncheck, store, fused, u0,
                          theta):
     bounds = _segment_bounds(n_steps, ncheck)
@@ -589,6 +616,7 @@ def _odeint_revolve2_fwd(f, method, t0, dt, n_steps, ncheck, store, fused, u0,
     return u, (store.pack(), theta)
 
 
+@scope("revolve2/bwd")
 def _odeint_revolve2_bwd(f, method, t0, dt, n_steps, ncheck, store, fused,
                          res, g):
     tab = get_tableau(method)
@@ -649,6 +677,7 @@ def _odeint_pnode_spill(f, method, t0, dt, n_steps, store, segment, fused,
     return u_final
 
 
+@scope("pnode_spill/fwd")
 def _odeint_pnode_spill_fwd(f, method, t0, dt, n_steps, store, segment,
                             fused, u0, theta):
     tab = get_tableau(method)
@@ -680,6 +709,7 @@ def _odeint_pnode_spill_fwd(f, method, t0, dt, n_steps, store, segment,
     return u, (tok, theta)
 
 
+@scope("pnode_spill/bwd")
 def _odeint_pnode_spill_bwd(f, method, t0, dt, n_steps, store, segment,
                             fused, res, g):
     tab = get_tableau(method)

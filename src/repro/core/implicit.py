@@ -75,6 +75,7 @@ import jax.numpy as jnp
 from jax import tree_util as jtu
 from jax.scipy.sparse.linalg import gmres
 
+from repro.obs.profile import scope
 from repro.core import revolve as revolve_mod
 from repro.core.integrators import (
     PyTree,
@@ -320,7 +321,8 @@ def odeint_implicit(f: VectorField, u0: PyTree, theta_p: PyTree, *, dt: float,
                     mem_verify: str = "measure",
                     newton_iters: int = 10, newton_tol: float = 1e-9,
                     gmres_iters: int = 20, gmres_tol: float = 1e-10,
-                    mass=None, return_stats: bool = False) -> PyTree:
+                    mass=None, return_stats: bool = False,
+                    obs=None) -> PyTree:
     """Fixed-step implicit theta-method solve with a discrete adjoint.
 
     ``adjoint`` selects the checkpoint policy (``pnode`` dense states /
@@ -337,6 +339,15 @@ def odeint_implicit(f: VectorField, u0: PyTree, theta_p: PyTree, *, dt: float,
     vectorized, one host round-trip per segment carries the whole batch.
     The slot-addressed revolve tiers reject vmap up front like the
     explicit path does.
+
+    ``obs=`` attaches a ``repro.obs.FlightRecorder``: every sweep emits
+    a runtime ``implicit.steps`` event carrying the stacked per-step
+    Newton exit states (iterations, residual, converged — one tap per
+    scan, expanded back to per-step records by
+    ``FlightRecorder.implicit_steps()``), reverse-pass re-advances emit
+    ``implicit.recompute``, and the checkpoint store records its
+    traffic.  Debug-effect taps only — gradients are bitwise-identical
+    to ``obs=None``, which traces nothing extra (zero overhead off).
     """
     n_steps = int(n_steps)
     if n_steps < 1:
@@ -406,6 +417,12 @@ def odeint_implicit(f: VectorField, u0: PyTree, theta_p: PyTree, *, dt: float,
     cfg = _SolverConfig(theta, int(newton_iters), float(newton_tol),
                         int(gmres_iters), float(gmres_tol))
     t0, dt = float(t0), float(dt)
+    if obs is not None:
+        obs.record("implicit.solve", method=method, adjoint=adjoint,
+                   n_steps=n_steps, dt=dt, t0=t0,
+                   ncheck=None if ncheck is None else int(ncheck),
+                   offload=offload, newton_iters=cfg.newton_iters,
+                   gmres_iters=cfg.gmres_iters, planned=from_auto)
 
     if adjoint in ("revolve", "revolve2"):
         ncheck = _validate_ncheck(adjoint, ncheck, n_steps)
@@ -417,6 +434,8 @@ def odeint_implicit(f: VectorField, u0: PyTree, theta_p: PyTree, *, dt: float,
                                  f"odeint_implicit(adjoint={adjoint!r})")
         from repro.mem.offload import make_store  # deferred: import cycle
         store = make_store(offload)
+        if obs is not None:
+            store.bind_obs(obs)
         impl = _imp_revolve if adjoint == "revolve" else _imp_revolve2
         u_final, stats = impl(f, cfg, t0, dt, n_steps, ncheck, store, u0,
                               theta_p)
@@ -431,6 +450,8 @@ def odeint_implicit(f: VectorField, u0: PyTree, theta_p: PyTree, *, dt: float,
         segment = (offload_segment if offload_segment is not None
                    else default_segment(n_steps))
         store = make_store("spill")
+        if obs is not None:
+            store.bind_obs(obs)
         # mapped axes are only visible HERE (as BatchTracers on the args);
         # the custom_vjp fwd is retraced at logical shapes, so the store's
         # payload-cap chunking needs the batch factor handed to it
@@ -438,7 +459,8 @@ def odeint_implicit(f: VectorField, u0: PyTree, theta_p: PyTree, *, dt: float,
         u_final, stats = _imp_spill(f, cfg, t0, dt, n_steps, store,
                                     min(segment, n_steps), u0, theta_p)
     else:
-        u_final, stats = _imp_dense(f, cfg, t0, dt, n_steps, u0, theta_p)
+        u_final, stats = _imp_dense(f, cfg, t0, dt, n_steps, obs, u0,
+                                    theta_p)
     return (u_final, stats) if return_stats else u_final
 
 
@@ -468,7 +490,8 @@ def _odeint_implicit_mass(f, mass, t0, dt, n_steps, theta, newton_iters,
 # dense pnode: every converged state rides the custom_vjp residuals
 # ---------------------------------------------------------------------------
 
-def _imp_solve(f, cfg, t0, dt, n_steps, u0, theta_p, save_states, base=0):
+def _imp_solve(f, cfg, t0, dt, n_steps, u0, theta_p, save_states, base=0,
+               obs=None, obs_kind="implicit.steps"):
     def body(carry, n):
         u, stats = carry
         # t as t0 + dt*(base+n) everywhere (not (t0+dt*base) + dt*n) so a
@@ -476,28 +499,44 @@ def _imp_solve(f, cfg, t0, dt, n_steps, u0, theta_p, save_states, base=0):
         # forward sweep's
         t_n = t0 + dt * (base + n)
         u_next, info = _step(f, cfg, u, theta_p, t_n, dt)
-        return (u_next, _stats_merge(stats, info)), \
-            (u if save_states else None)
+        ys = u if save_states else None
+        if obs is not None:
+            ys = (ys, info)
+        return (u_next, _stats_merge(stats, info)), ys
 
-    (u_final, stats), states = jax.lax.scan(body, (u0, _stats_zero()),
-                                            jnp.arange(n_steps))
+    (u_final, stats), ys = jax.lax.scan(body, (u0, _stats_zero()),
+                                        jnp.arange(n_steps))
+    if obs is not None:
+        states, infos = ys
+        # ONE stacked debug-effect tap at the top level of the rule: a
+        # per-step tap inside the scan body would be silently dropped in
+        # custom_vjp fwd rules on jax 0.4.37 (scan-in-fwd effects; see
+        # repro.obs.trace docstring), the top-level tap on the stacked
+        # StepInfo is not.  Nothing feeds the computation, so numerics
+        # are unchanged.
+        obs.emit(obs_kind, base=jnp.asarray(base), iters=infos.iters,
+                 residual=infos.residual, converged=infos.converged)
+    else:
+        states = ys
     return u_final, stats, states
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3, 4))
-def _imp_dense(f, cfg, t0, dt, n_steps, u0, theta_p):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3, 4, 5))
+def _imp_dense(f, cfg, t0, dt, n_steps, obs, u0, theta_p):
     u_final, stats, _ = _imp_solve(f, cfg, t0, dt, n_steps, u0, theta_p,
-                                   save_states=False)
+                                   save_states=False, obs=obs)
     return u_final, stats
 
 
-def _imp_dense_fwd(f, cfg, t0, dt, n_steps, u0, theta_p):
+@scope("implicit/fwd")
+def _imp_dense_fwd(f, cfg, t0, dt, n_steps, obs, u0, theta_p):
     u_final, stats, states = _imp_solve(f, cfg, t0, dt, n_steps, u0, theta_p,
-                                        save_states=True)
+                                        save_states=True, obs=obs)
     return (u_final, stats), (states, u_final, theta_p)
 
 
-def _imp_dense_bwd(f, cfg, t0, dt, n_steps, res, ct):
+@scope("implicit/bwd")
+def _imp_dense_bwd(f, cfg, t0, dt, n_steps, obs, res, ct):
     g, _ = ct  # the stats output is non-differentiable; drop its cotangent
     states, u_final, theta_p = res
 
@@ -528,7 +567,8 @@ _imp_dense.defvjp(_imp_dense_fwd, _imp_dense_bwd)
 # checkpoints, slots in a CheckpointStore tier
 # ---------------------------------------------------------------------------
 
-def _imp_advance(f, cfg, u, theta_p, start_idx, m, t0, dt, stats=None):
+def _imp_advance(f, cfg, u, theta_p, start_idx, m, t0, dt, stats=None,
+                 obs=None, obs_kind="implicit.steps"):
     """Re-run m implicit steps from u (step indices start_idx..start_idx+m-1)
     — bitwise-identical to the forward sweep's states since the op sequence
     is the same.  Stats aggregation is optional (the reverse-pass advances
@@ -542,29 +582,36 @@ def _imp_advance(f, cfg, u, theta_p, start_idx, m, t0, dt, stats=None):
         u, st = carry
         t = t0 + dt * (start_idx + k)
         u, info = _step(f, cfg, u, theta_p, t, dt)
-        return (u, _stats_merge(st, info) if track else st), None
+        return (u, _stats_merge(st, info) if track else st), \
+            (info if obs is not None else None)
 
-    (u, stats), _ = jax.lax.scan(body, (u, stats), jnp.arange(m))
+    (u, stats), infos = jax.lax.scan(body, (u, stats), jnp.arange(m))
+    if obs is not None:  # stacked top-level tap (see _imp_solve)
+        obs.emit(obs_kind, base=jnp.asarray(start_idx), iters=infos.iters,
+                 residual=infos.residual, converged=infos.converged)
     return (u, stats) if track else u
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3, 4, 5, 6))
 def _imp_revolve(f, cfg, t0, dt, n_steps, ncheck, store, u0, theta_p):
     u_final, stats, _ = _imp_solve(f, cfg, t0, dt, n_steps, u0, theta_p,
-                                   save_states=False)
+                                   save_states=False, obs=store._obs)
     return u_final, stats
 
 
+@scope("imp_revolve/fwd")
 def _imp_revolve_fwd(f, cfg, t0, dt, n_steps, ncheck, store, u0, theta_p):
     positions = [0] + revolve_mod.sweep_checkpoint_positions(n_steps, ncheck)
     bounds = positions + [n_steps]
     u, stats = u0, _stats_zero()
     for a, b in zip(bounds[:-1], bounds[1:]):
         store.put(a, u)
-        u, stats = _imp_advance(f, cfg, u, theta_p, a, b - a, t0, dt, stats)
+        u, stats = _imp_advance(f, cfg, u, theta_p, a, b - a, t0, dt, stats,
+                                obs=store._obs)
     return (u, stats), (store.pack(), u, theta_p)
 
 
+@scope("imp_revolve/bwd")
 def _imp_revolve_bwd(f, cfg, t0, dt, n_steps, ncheck, store, res, ct):
     g, _ = ct
     ckpt_res, u_final, theta_p = res
@@ -582,7 +629,8 @@ def _imp_revolve_bwd(f, cfg, t0, dt, n_steps, ncheck, store, res, ct):
         if kind == "advance":
             _, start, m = act
             u = store.get(start)
-            u = _imp_advance(f, cfg, u, theta_p, start, m, t0, dt)
+            u = _imp_advance(f, cfg, u, theta_p, start, m, t0, dt,
+                             obs=store._obs, obs_kind="implicit.recompute")
             store.put(start + m, u)
         elif kind == "adjoint":
             _, idx = act
@@ -613,19 +661,22 @@ _imp_revolve.defvjp(_imp_revolve_fwd, _imp_revolve_bwd)
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3, 4, 5, 6))
 def _imp_revolve2(f, cfg, t0, dt, n_steps, ncheck, store, u0, theta_p):
     u_final, stats, _ = _imp_solve(f, cfg, t0, dt, n_steps, u0, theta_p,
-                                   save_states=False)
+                                   save_states=False, obs=store._obs)
     return u_final, stats
 
 
+@scope("imp_revolve2/fwd")
 def _imp_revolve2_fwd(f, cfg, t0, dt, n_steps, ncheck, store, u0, theta_p):
     from repro.core.adjoint import _segment_bounds
     u, stats = u0, _stats_zero()
     for a, b in _segment_bounds(n_steps, ncheck):
         store.put(a, u)
-        u, stats = _imp_advance(f, cfg, u, theta_p, a, b - a, t0, dt, stats)
+        u, stats = _imp_advance(f, cfg, u, theta_p, a, b - a, t0, dt, stats,
+                                obs=store._obs)
     return (u, stats), (store.pack(), theta_p)
 
 
+@scope("imp_revolve2/bwd")
 def _imp_revolve2_bwd(f, cfg, t0, dt, n_steps, ncheck, store, res, ct):
     g, _ = ct
     ckpt_res, theta_p = res
@@ -642,7 +693,9 @@ def _imp_revolve2_bwd(f, cfg, t0, dt, n_steps, ncheck, store, res, ct):
         # re-advance the segment, saving states (scan); the recomputed
         # segment end is bitwise the forward's u_b
         u_b, _, states = _imp_solve(f, cfg, t0, dt, m, u_a, theta_p,
-                                    save_states=True, base=a)
+                                    save_states=True, base=a,
+                                    obs=store._obs,
+                                    obs_kind="implicit.recompute")
         u_nexts = jtu.tree_map(
             lambda s, ub: jnp.concatenate([s[1:], ub[None]], axis=0), states,
             u_b)
@@ -676,40 +729,59 @@ _imp_revolve2.defvjp(_imp_revolve2_fwd, _imp_revolve2_bwd)
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3, 4, 5, 6))
 def _imp_spill(f, cfg, t0, dt, n_steps, store, segment, u0, theta_p):
     u_final, stats, _ = _imp_solve(f, cfg, t0, dt, n_steps, u0, theta_p,
-                                   save_states=False)
+                                   save_states=False, obs=store._obs)
     return u_final, stats
 
 
+@scope("imp_spill/fwd")
 def _imp_spill_fwd(f, cfg, t0, dt, n_steps, store, segment, u0, theta_p):
     n_full, rem = divmod(n_steps, segment)
+    obs = store._obs
 
     def run_segment(u, stats, tok, base, m):
         def step(carry, i):
             u, st = carry
             t = t0 + dt * (base + i)
             u_next, info = _step(f, cfg, u, theta_p, t, dt)
-            return (u_next, _stats_merge(st, info)), u
+            return (u_next, _stats_merge(st, info)), \
+                ((u, info) if obs is not None else u)
 
-        (u, stats), staged = jax.lax.scan(step, (u, stats), jnp.arange(m))
+        (u, stats), ys = jax.lax.scan(step, (u, stats), jnp.arange(m))
+        staged, infos = ys if obs is not None else (ys, None)
         tok = store.write_batch(tok, base, staged)  # ONE callback, m slots
-        return u, stats, tok
+        return u, stats, tok, infos
 
     u, stats, tok = u0, _stats_zero(), store.init_token()
+    seg_infos = rem_infos = None
     if n_full:
         def seg_body(carry, s_idx):
             u, stats, tok = carry
-            u, stats, tok = run_segment(u, stats, tok, s_idx * segment,
-                                        segment)
-            return (u, stats, tok), None
+            u, stats, tok, infos = run_segment(u, stats, tok,
+                                               s_idx * segment, segment)
+            return (u, stats, tok), infos
 
-        (u, stats, tok), _ = jax.lax.scan(seg_body, (u, stats, tok),
-                                          jnp.arange(n_full))
+        (u, stats, tok), seg_infos = jax.lax.scan(seg_body, (u, stats, tok),
+                                                  jnp.arange(n_full))
     if rem:
-        u, stats, tok = run_segment(u, stats, tok,
-                                    jnp.asarray(n_full * segment), rem)
+        u, stats, tok, rem_infos = run_segment(
+            u, stats, tok, jnp.asarray(n_full * segment), rem)
+    if obs is not None:
+        # stacked top-level taps (see _imp_solve: per-step taps inside
+        # the scans are dropped in custom_vjp fwd rules on jax 0.4.37)
+        if seg_infos is not None:
+            flat = jtu.tree_map(
+                lambda a: a.reshape((-1,) + a.shape[2:]), seg_infos)
+            obs.emit("implicit.steps", base=jnp.asarray(0),
+                     iters=flat.iters, residual=flat.residual,
+                     converged=flat.converged)
+        if rem_infos is not None:
+            obs.emit("implicit.steps", base=jnp.asarray(n_full * segment),
+                     iters=rem_infos.iters, residual=rem_infos.residual,
+                     converged=rem_infos.converged)
     return (u, stats), (tok, u, theta_p)
 
 
+@scope("imp_spill/bwd")
 def _imp_spill_bwd(f, cfg, t0, dt, n_steps, store, segment, res, ct):
     g, _ = ct
     tok, u_final, theta_p = res

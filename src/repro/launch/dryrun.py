@@ -40,6 +40,7 @@ from repro.launch.mesh import (HBM_BW, ICI_BW_PER_LINK, PEAK_FLOPS_BF16,
 from repro.launch.steps import make_decode_step, make_prefill_step, \
     make_train_step
 from repro.models import lm
+from repro.obs import MetricsSink, StructuredLogger
 from repro.optim.adamw import AdamW
 
 _DTYPE_BYTES = {
@@ -269,6 +270,9 @@ def main():
     ap.add_argument("--force", action="store_true")
     ap.add_argument("--tag", default="")
     ap.add_argument("--out-dir", default="experiments/dryrun")
+    ap.add_argument("--metrics", default=None, metavar="PATH",
+                    help="write one structured JSONL record per cell to "
+                         "PATH (repro.obs.MetricsSink)")
     args = ap.parse_args()
 
     cells = []
@@ -279,6 +283,8 @@ def main():
             ap.error("--arch and --shape required unless --all")
         cells = [(args.arch, args.shape)]
 
+    sink = MetricsSink(args.metrics) if args.metrics else None
+    slog = StructuredLogger(sink=sink)
     for arch, shape in cells:
         try:
             rec = run_cell(arch, shape, args.mesh == "multipod", args.accum,
@@ -286,14 +292,27 @@ def main():
                            args.force, args.tag)
             if rec["status"] == "ok":
                 r = rec["roofline"]
-                print(f"{arch:26s} {shape:12s} OK  compile={rec['compile_s']:.1f}s "
-                      f"compute={r['compute_s']:.4f}s memory={r['memory_s']:.4f}s "
-                      f"coll={r['collective_s']:.4f}s dom={r['dominant']}")
+                slog.log(
+                    "dryrun.cell",
+                    f"{arch:26s} {shape:12s} OK  compile={rec['compile_s']:.1f}s "
+                    f"compute={r['compute_s']:.4f}s memory={r['memory_s']:.4f}s "
+                    f"coll={r['collective_s']:.4f}s dom={r['dominant']}",
+                    arch=arch, shape=shape, status="ok",
+                    compile_s=rec["compile_s"], roofline=r,
+                    memory=rec.get("memory"))
             else:
-                print(f"{arch:26s} {shape:12s} SKIP ({rec['reason'][:60]})")
+                slog.log("dryrun.cell",
+                         f"{arch:26s} {shape:12s} SKIP ({rec['reason'][:60]})",
+                         arch=arch, shape=shape, status="skipped",
+                         reason=rec["reason"])
         except Exception as e:  # noqa: BLE001 — report and continue the sweep
-            print(f"{arch:26s} {shape:12s} FAIL {type(e).__name__}: {e}")
+            slog.log("dryrun.cell",
+                     f"{arch:26s} {shape:12s} FAIL {type(e).__name__}: {e}",
+                     arch=arch, shape=shape, status="fail",
+                     error=f"{type(e).__name__}: {e}")
         sys.stdout.flush()
+    if sink is not None:
+        sink.close()
 
 
 if __name__ == "__main__":

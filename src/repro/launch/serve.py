@@ -22,11 +22,16 @@ from repro.dist import sharding as shd
 from repro.launch.mesh import make_host_mesh
 from repro.launch.steps import make_decode_step, make_prefill_step
 from repro.models import lm
+from repro.obs import MetricsSink, StructuredLogger
 
 
 def serve(cfg, *, batch: int, prompt_len: int, gen: int, mesh=None,
-          temperature: float = 0.0, seed: int = 0, log_fn=print):
-    """Prefill + greedy/temperature decode.  Returns (tokens, stats)."""
+          temperature: float = 0.0, seed: int = 0, log_fn=print,
+          sink: MetricsSink | None = None):
+    """Prefill + greedy/temperature decode.  Returns (tokens, stats).
+
+    ``sink`` receives a structured ``serve.done`` record (prefill/decode
+    wall time, tokens/s) alongside the human line through ``log_fn``."""
     mesh = mesh or make_host_mesh()
     max_seq = prompt_len + gen
     cell = ShapeCell("serve", prompt_len, batch, "prefill")
@@ -76,8 +81,11 @@ def serve(cfg, *, batch: int, prompt_len: int, gen: int, mesh=None,
         "decode_s": t_decode,
         "tok_per_s": batch * (gen - 1) / max(t_decode, 1e-9),
     }
-    log_fn(f"[serve] prefill {t_prefill*1e3:.0f} ms, "
-           f"decode {stats['tok_per_s']:.1f} tok/s")
+    StructuredLogger(log_fn=log_fn, sink=sink).log(
+        "serve.done",
+        f"[serve] prefill {t_prefill*1e3:.0f} ms, "
+        f"decode {stats['tok_per_s']:.1f} tok/s",
+        batch=batch, prompt_len=prompt_len, gen=gen, **stats)
     return tokens, stats
 
 
@@ -88,12 +96,18 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--metrics", default=None, metavar="PATH",
+                    help="write structured serve stats as JSONL to PATH")
     args = ap.parse_args()
 
     cfg = reduced(get_arch(args.arch))
+    sink = MetricsSink(args.metrics) if args.metrics else None
     tokens, stats = serve(cfg, batch=args.batch, prompt_len=args.prompt_len,
-                          gen=args.gen, temperature=args.temperature)
+                          gen=args.gen, temperature=args.temperature,
+                          sink=sink)
     print(f"[serve] generated {tokens.shape} tokens; stats={stats}")
+    if sink is not None:
+        sink.close()
 
 
 if __name__ == "__main__":

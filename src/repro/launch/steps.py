@@ -16,6 +16,16 @@ from repro.optim import compress as compress_mod
 from repro.optim.adamw import AdamW
 
 
+def global_grad_norm(grads) -> jnp.ndarray:
+    """Global L2 norm over every leaf — the per-step gradient-health
+    scalar the metrics sink records."""
+    leaves = jtu.tree_leaves(grads)
+    if not leaves:
+        return jnp.zeros(())
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in leaves))
+
+
 def make_train_step(cfg: ModelConfig, opt: AdamW, accum: int = 1,
                     compress: str | None = None):
     """Returns train_step(params, opt_state, batch, step) -> (params,
@@ -75,6 +85,8 @@ def make_train_step(cfg: ModelConfig, opt: AdamW, accum: int = 1,
                 compress_mod.bf16_compress(grads))
         params, opt_state, opt_metrics = opt.update(grads, opt_state, params)
         metrics = dict(metrics, loss=loss, **opt_metrics)
+        if "grad_norm" not in metrics:  # AdamW already reports pre-clip norm
+            metrics["grad_norm"] = global_grad_norm(grads)
         return params, opt_state, metrics
 
     if compress != "int8":
@@ -86,6 +98,8 @@ def make_train_step(cfg: ModelConfig, opt: AdamW, accum: int = 1,
         grads = compress_mod.int8_decompress(q)
         params, opt_state, opt_metrics = opt.update(grads, opt_state, params)
         metrics = dict(metrics, loss=loss, **opt_metrics)
+        if "grad_norm" not in metrics:  # AdamW already reports pre-clip norm
+            metrics["grad_norm"] = global_grad_norm(grads)
         return params, opt_state, comp_state, metrics
 
     return train_step_int8

@@ -30,19 +30,42 @@ from repro.ft import StragglerDetector, TrainSupervisor
 from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.launch.steps import init_compress_state, make_train_step
 from repro.models import lm
+from repro.obs import MetricsSink, StructuredLogger
 from repro.optim.adamw import AdamW
+
+
+def _compiled_peak_bytes(step_fn, *concrete_args):
+    """Best-effort measured peak of the compiled train step
+    (``launch.hlo_cost.peak_live_bytes`` — the same metric the byte-budget
+    planner verifies against).  None if lowering text is unavailable."""
+    try:
+        from repro.launch.hlo_cost import peak_live_bytes
+        compiled = step_fn.lower(*concrete_args).compile()
+        return int(peak_live_bytes(compiled.as_text()))
+    except Exception:
+        return None
 
 
 def train(cfg: ModelConfig, cell: ShapeCell, *, steps: int, mesh=None,
           ckpt_dir: str | None = None, ckpt_every: int = 50,
           accum: int = 1, lr: float = 3e-4, log_every: int = 10,
           seed: int = 0, grad_dtype: str | None = None,
-          compress: str | None = None, log_fn=print) -> dict:
+          compress: str | None = None, log_fn=print,
+          sink: MetricsSink | None = None,
+          predicted_peak_bytes: int | None = None) -> dict:
     """Returns {"losses": [...], "resumed_from": step|None, ...}.
 
     ``compress`` wires optim/compress.py gradient compression into the
-    production step (flag-gated, default off; see launch/steps.py)."""
+    production step (flag-gated, default off; see launch/steps.py).
+
+    ``sink`` (a ``repro.obs.MetricsSink``) receives one structured
+    ``train.step`` record per step — loss, global grad norm, wall time —
+    plus a ``train.compile`` record comparing the compiled step's measured
+    peak bytes against ``predicted_peak_bytes`` (the planner's number,
+    when a budget was planned); drift beyond 25% is warned through
+    ``log_fn`` and flagged in the record."""
     mesh = mesh or make_host_mesh()
+    slog = StructuredLogger(log_fn=log_fn, sink=sink)
     opt = AdamW(lr=lr, total_steps=max(steps, 2), warmup_steps=min(100, steps // 10 + 1),
                 grad_dtype=grad_dtype)
     pipe = SyntheticLM(cfg, cell, seed=seed)
@@ -90,7 +113,9 @@ def train(cfg: ModelConfig, cell: ShapeCell, *, steps: int, mesh=None,
                 params, opt_state = restored["params"], restored["opt_state"]
                 if int8:
                     comp_state = restored["comp_state"]
-                log_fn(f"[train] resumed from step {start_step}")
+                slog.log("train.resume",
+                         f"[train] resumed from step {start_step}",
+                         step=start_step)
 
         if int8:
             step_fn = jax.jit(
@@ -106,6 +131,34 @@ def train(cfg: ModelConfig, cell: ShapeCell, *, steps: int, mesh=None,
                 donate_argnums=(0, 1))
 
         losses = []
+        measured_peak = None
+        if sink is not None:
+            # measure before step 0: donated buffers are gone afterwards
+            first = pipe.batch(jnp.int32(start_step))
+            cargs = ((params, opt_state, comp_state, first,
+                      jnp.int32(start_step)) if int8 else
+                     (params, opt_state, first, jnp.int32(start_step)))
+            measured_peak = _compiled_peak_bytes(step_fn, *cargs)
+            drift = None
+            if measured_peak is not None and predicted_peak_bytes:
+                # the planner prices live *activations*; the compiled peak
+                # also holds params/opt-state/batch, so fold those in
+                from repro.mem.model import tree_bytes
+                predicted_peak_bytes = predicted_peak_bytes + tree_bytes(
+                    (params, opt_state, first))
+                drift = measured_peak / predicted_peak_bytes - 1.0
+                if abs(drift) > 0.25:
+                    slog.log("train.peak_drift",
+                             f"[train] WARNING: measured peak "
+                             f"{measured_peak} B is {drift:+.0%} off the "
+                             f"planner's {predicted_peak_bytes} B",
+                             measured_peak_bytes=measured_peak,
+                             predicted_peak_bytes=predicted_peak_bytes,
+                             drift=drift)
+            slog.metric("train.compile",
+                        measured_peak_bytes=measured_peak,
+                        predicted_peak_bytes=predicted_peak_bytes,
+                        drift=drift)
         detector = StragglerDetector()
         stragglers: list[int] = []
         with TrainSupervisor(
@@ -132,6 +185,12 @@ def train(cfg: ModelConfig, cell: ShapeCell, *, steps: int, mesh=None,
                     comp_state = holder["c"]
                 loss = float(holder["m"]["loss"])
                 losses.append(loss)
+                if sink is not None:
+                    gn = holder["m"].get("grad_norm")
+                    slog.metric("train.step", step=step, loss=loss,
+                                grad_norm=(None if gn is None
+                                           else float(gn)),
+                                step_ms=dt * 1e3)
                 if step % log_every == 0 or step == steps - 1:
                     log_fn(f"[train] step {step:5d} loss {loss:.4f} "
                            f"({dt*1e3:.0f} ms)")
@@ -175,6 +234,9 @@ def main():
                     help="activation-memory budget in bytes (suffixes "
                          "K/M/G); the repro.mem planner picks the depth "
                          "remat policy for it, overriding --remat")
+    ap.add_argument("--metrics", default=None, metavar="PATH",
+                    help="write per-step metrics as JSONL to PATH "
+                         "(repro.obs.MetricsSink)")
     args = ap.parse_args()
 
     full = get_arch(args.arch)
@@ -185,24 +247,37 @@ def main():
     if args.remat:
         cfg = dataclasses.replace(cfg, remat=args.remat)
     cell = ShapeCell("cli", args.seq, args.batch, "train")
+    sink = MetricsSink(args.metrics) if args.metrics else None
+    slog = StructuredLogger(sink=sink)
+    predicted = None
     if args.mem_budget is not None:
-        from repro.mem.planner import plan_depth_remat
+        from repro.mem.planner import depth_remat_live_bytes, plan_depth_remat
         budget = parse_bytes(args.mem_budget)
         remat, ncheck, fits = plan_depth_remat(cfg, cell, budget)
-        print(f"[train] mem budget {budget} B -> depth remat={remat!r} "
-              f"ncheck={ncheck}")
+        predicted = depth_remat_live_bytes(cfg, cell, remat, ncheck)
+        slog.log("train.plan",
+                 f"[train] mem budget {budget} B -> depth remat={remat!r} "
+                 f"ncheck={ncheck} (predicted live {predicted} B)",
+                 mem_budget=budget, remat=remat, ncheck=ncheck, fits=fits,
+                 predicted_peak_bytes=predicted)
         if not fits:
-            print("[train] WARNING: no depth-checkpointing policy fits "
-                  "this budget — proceeding with the minimum-memory plan, "
-                  "expect to exceed it")
+            slog.log("train.plan_overflow",
+                     "[train] WARNING: no depth-checkpointing policy fits "
+                     "this budget — proceeding with the minimum-memory "
+                     "plan, expect to exceed it", mem_budget=budget)
         cfg = dataclasses.replace(cfg, remat=remat, ncheck=ncheck)
     t0 = time.time()
     out = train(cfg, cell, steps=args.steps, mesh=mesh,
                 ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
                 accum=args.accum, lr=args.lr, grad_dtype=args.grad_dtype,
-                compress=None if args.compress == "none" else args.compress)
-    print(f"[train] done in {time.time()-t0:.1f}s; "
-          f"final loss {out['losses'][-1]:.4f}")
+                compress=None if args.compress == "none" else args.compress,
+                sink=sink, predicted_peak_bytes=predicted)
+    slog.log("train.done",
+             f"[train] done in {time.time()-t0:.1f}s; "
+             f"final loss {out['losses'][-1]:.4f}",
+             final_loss=out["losses"][-1], stragglers=out["stragglers"])
+    if sink is not None:
+        sink.close()
 
 
 if __name__ == "__main__":

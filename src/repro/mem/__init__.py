@@ -17,15 +17,17 @@ from repro.mem.model import (CostEstimate, f_activation_bytes,
 from repro.mem.offload import (CheckpointStore, DeviceStore, HostStore,
                                SpillStore, default_segment,
                                host_memory_kind, make_store,
-                               reset_spill_stats, spill_stats)
-from repro.mem.planner import (Plan, candidate_costs, plan_depth_remat,
-                               plan_odeint)
+                               per_store_spill_stats, reset_spill_stats,
+                               spill_stats)
+from repro.mem.planner import (CandidateDecision, Plan, candidate_costs,
+                               plan_depth_remat, plan_odeint)
 
 __all__ = [
     "CostEstimate", "policy_cost", "tree_bytes", "f_activation_bytes",
     "max_fitting_ncheck", "measure_reverse_cost", "spill_callback_counts",
     "CheckpointStore", "DeviceStore", "HostStore", "SpillStore",
     "make_store", "host_memory_kind", "default_segment",
-    "reset_spill_stats", "spill_stats",
-    "Plan", "plan_odeint", "candidate_costs", "plan_depth_remat",
+    "reset_spill_stats", "spill_stats", "per_store_spill_stats",
+    "CandidateDecision", "Plan", "plan_odeint", "candidate_costs",
+    "plan_depth_remat",
 ]

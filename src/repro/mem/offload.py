@@ -65,9 +65,22 @@ the BENCH gates price the real host round-trips.  A single slot bigger
 than the cap cannot be split further (warned; the slot-addressed
 ``put``/``write_at`` paths have the same exposure).
 
-``spill_stats()`` / ``reset_spill_stats()`` expose host-side callback
-counters (actual executions, not traces) for the BENCH_3 hot-path
-benchmark and the per-segment callback-count tests.
+Counters: every store keeps its own host-side callback counters
+(``store.stats``, keyed by an auto-assigned ``store_id``) and mirrors each
+increment into a process-wide aggregate — ``spill_stats()`` returns the
+aggregate (the historical API the BENCH_3 gates and per-segment
+callback-count tests read), ``per_store_spill_stats()`` the per-store
+view.  All counter mutation holds one module lock: XLA executes callbacks
+on its own thread pool, so a chunked/vmapped program's callbacks can run
+concurrently with each other and with a benchmark's
+``reset_spill_stats()`` on the main thread — unlocked dict updates would
+lose increments or tear the reset.  Counters count actual EXECUTIONS, not
+traces.  Attaching a ``repro.obs.FlightRecorder`` via ``bind_obs`` makes
+every callback additionally record a ``spill.write``/``spill.read``/
+``spill.free`` trace event carrying the store id, slot base, slot count,
+and payload bytes — recorded purely host-side inside the callbacks that
+already run, so the traced program is unchanged and grads stay bitwise
+identical with obs on.
 
 Table-2 mapping (see ``repro.mem.model``): the store only changes WHERE
 N_c*(N_s+1) checkpoint vectors live, never how many f-evaluations the
@@ -86,12 +99,17 @@ objects, so concurrent solves never share keys.
 """
 from __future__ import annotations
 
+import itertools
+import threading
+import weakref
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax import tree_util as jtu
+
+from repro.obs.profile import host_annotation
 
 PyTree = Any
 
@@ -141,6 +159,13 @@ def batch_scale(tree: PyTree) -> int:
     return max((scale(x) for x in jtu.tree_leaves(tree)), default=1)
 
 
+def _tree_nbytes(tree: PyTree) -> int:
+    """Logical payload bytes of a pytree (works on traced values)."""
+    return sum(int(np.prod(jnp.shape(x), dtype=np.int64))
+               * np.dtype(jnp.result_type(x)).itemsize
+               for x in jtu.tree_leaves(tree))
+
+
 def _chunk_slots(seg: int, per_slot_bytes: int) -> int:
     """Slots per callback so no payload leaf exceeds ``_CB_PAYLOAD_CAP``."""
     if per_slot_bytes <= 0:
@@ -156,23 +181,58 @@ def _chunk_slots(seg: int, per_slot_bytes: int) -> int:
         return 1
     return min(m, seg)
 
-#: host-side callback counters (incremented when a callback EXECUTES, not
-#: when it is traced) — the measured quantity behind the "one callback per
-#: segment" acceptance criterion (BENCH_3 / tests).
-_SPILL_STATS = {"write_cb": 0, "read_cb": 0, "free_cb": 0,
-                "write_slots": 0, "read_slots": 0}
+#: counter keys every SpillStore tracks (per store and in the aggregate):
+#: ``*_cb`` counts host round-trips, ``*_slots`` checkpoint slots moved
+#: (slots/cb = achieved batching factor), ``*_bytes`` payload traffic.
+_STAT_KEYS = ("write_cb", "read_cb", "free_cb",
+              "write_slots", "read_slots", "write_bytes", "read_bytes")
+
+#: guards ALL counter mutation and the reset: callbacks execute on XLA's
+#: thread pool, concurrently with each other (chunked/vmapped programs)
+#: and with a benchmark's ``reset_spill_stats()`` on the main thread.
+_STATS_LOCK = threading.RLock()
+
+#: process-wide aggregate (the historical ``spill_stats()`` view) —
+#: updated in lockstep with the owning store's per-store dict, and kept
+#: separate so traffic survives the (per-odeint-call) store objects.
+_AGG: Dict[str, int] = {k: 0 for k in _STAT_KEYS}
+
+#: live stores by id, weakly: stores are per-odeint-call objects, so dead
+#: ones drop out of ``per_store_spill_stats()`` while their traffic stays
+#: in the aggregate.
+_STORES: "weakref.WeakValueDictionary[str, SpillStore]" = \
+    weakref.WeakValueDictionary()
+_STORE_IDS = itertools.count()
 
 
 def reset_spill_stats() -> None:
-    for k in _SPILL_STATS:
-        _SPILL_STATS[k] = 0
+    """Zero the aggregate and every live store's counters atomically (a
+    callback running mid-reset sees either all-old or all-new)."""
+    with _STATS_LOCK:
+        for k in _STAT_KEYS:
+            _AGG[k] = 0
+        for st in list(_STORES.values()):
+            for k in _STAT_KEYS:
+                st.stats[k] = 0
 
 
 def spill_stats() -> Dict[str, int]:
-    """Copy of the global spill-store callback counters: ``*_cb`` counts
-    host round-trips, ``*_slots`` counts checkpoint slots moved (so
-    slots/cb is the achieved batching factor)."""
-    return dict(_SPILL_STATS)
+    """Copy of the AGGREGATE spill-store callback counters (every store's
+    traffic summed; see ``per_store_spill_stats`` for the breakdown):
+    ``*_cb`` counts host round-trips, ``*_slots`` counts checkpoint slots
+    moved (so slots/cb is the achieved batching factor), ``*_bytes`` the
+    payload traffic."""
+    with _STATS_LOCK:
+        return dict(_AGG)
+
+
+def per_store_spill_stats() -> Dict[str, Dict[str, int]]:
+    """Counters keyed by ``store_id`` for every live ``SpillStore`` that
+    has executed at least one callback since its creation or the last
+    reset (all-zero stores are omitted to keep the view readable)."""
+    with _STATS_LOCK:
+        return {sid: dict(st.stats) for sid, st in sorted(_STORES.items())
+                if any(st.stats.values())}
 
 
 def default_segment(n_steps: int) -> int:
@@ -231,17 +291,37 @@ class CheckpointStore:
         self._vals: Dict[int, PyTree] = {}
         self._order: List[int] = []
         self.effective_tier = self.tier
+        self.store_id = f"{self.tier}-{next(_STORE_IDS)}"
+        self._obs = None
+
+    def bind_obs(self, recorder) -> None:
+        """Attach a ``repro.obs.FlightRecorder``.  Device/host tiers
+        record trace-time ``store.put``/``store.get``/``store.free``
+        events (the schedule — once per compilation); the spill tier
+        additionally records runtime ``spill.*`` events from inside its
+        host callbacks (once per execution)."""
+        self._obs = recorder
+
+    def _note(self, kind: str, slot, tree: PyTree = None) -> None:
+        if self._obs is None:
+            return
+        self._obs.record(kind, store=self.store_id,
+                         tier=self.effective_tier, slot=slot,
+                         bytes=_tree_nbytes(tree) if tree is not None else 0)
 
     # -- slot-addressed (trace-time revolve schedule) ----------------------
     def put(self, slot: int, tree: PyTree) -> None:
+        self._note("store.put", slot, tree)
         if slot not in self._vals:
             self._order.append(slot)
         self._vals[slot] = self._to_store(tree)
 
     def get(self, slot: int) -> PyTree:
+        self._note("store.get", slot, self._vals[slot])
         return self._from_store(self._vals[slot])
 
     def free(self, slot: int) -> None:
+        self._note("store.free", slot)
         self._vals.pop(slot, None)
 
     def pack(self) -> PyTree:
@@ -333,42 +413,77 @@ class SpillStore(CheckpointStore):
         self._meta: Dict[Any, Tuple[Any, Tuple[jax.ShapeDtypeStruct, ...]]] = {}
         self._tok = None
         self.effective_tier = "spill"
+        #: per-store callback counters (see module docstring); mutation
+        #: holds _STATS_LOCK and mirrors into the _AGG view
+        self.stats: Dict[str, int] = {k: 0 for k in _STAT_KEYS}
+        _STORES[self.store_id] = self
         #: vmap payload multiplier for the chunking decision — set by the
         #: odeint entry point via ``batch_scale(...)`` (mapped axes are
         #: invisible by the time write_batch/prefetch are traced; see
         #: ``batch_scale``).
         self.payload_scale = 1
 
+    # -- counting + obs (host-side, called from the callbacks) --------------
+    def _tally(self, direction: str, *, slots: int, nbytes: int, base):
+        """Bump this store's counters and the aggregate in lockstep (under
+        the module lock — see module docstring), then record an obs event
+        if a recorder is bound.  Runs on XLA's callback thread."""
+        with _STATS_LOCK:
+            if direction == "free":
+                self.stats["free_cb"] += 1
+                _AGG["free_cb"] += 1
+            else:
+                for key, n in ((f"{direction}_cb", 1),
+                               (f"{direction}_slots", slots),
+                               (f"{direction}_bytes", nbytes)):
+                    self.stats[key] += n
+                    _AGG[key] += n
+        if self._obs is not None:
+            self._obs.record(f"spill.{direction}", _runtime=True,
+                             store=self.store_id, base=base,
+                             slots=slots, bytes=nbytes)
+
     # -- host-side callbacks (never traced) ---------------------------------
     def _cb_write(self, token, slot, *leaves):
-        _SPILL_STATS["write_cb"] += 1
-        _SPILL_STATS["write_slots"] += 1
-        self._host[int(slot)] = [np.asarray(x).copy() for x in leaves]
+        with host_annotation("spill/write"):
+            arrs = [np.asarray(x).copy() for x in leaves]
+            self._host[int(slot)] = arrs
+            self._tally("write", slots=1,
+                        nbytes=sum(a.nbytes for a in arrs), base=int(slot))
         return np.float32(0)
 
     def _cb_write_if(self, token, slot, keep, *leaves):
-        _SPILL_STATS["write_cb"] += 1
-        if bool(keep):
-            _SPILL_STATS["write_slots"] += 1
-            self._host[int(slot)] = [np.asarray(x).copy() for x in leaves]
+        with host_annotation("spill/write"):
+            if bool(keep):
+                arrs = [np.asarray(x).copy() for x in leaves]
+                self._host[int(slot)] = arrs
+                self._tally("write", slots=1,
+                            nbytes=sum(a.nbytes for a in arrs),
+                            base=int(slot))
+            else:  # masked out: the round-trip still happened
+                self._tally("write", slots=0, nbytes=0, base=int(slot))
         return np.float32(0)
 
     def _cb_read(self):
         def read(token, slot):
-            _SPILL_STATS["read_cb"] += 1
-            _SPILL_STATS["read_slots"] += 1
-            leaves = self._host.get(int(slot))
-            if leaves is None:
-                # a schedule bug or a reordered free — fail loudly rather
-                # than silently contributing zero gradients
-                raise KeyError(f"spill store: slot {int(slot)} read "
-                               "before it was written (or after free)")
-            return (np.float32(0),) + tuple(np.asarray(x) for x in leaves)
+            with host_annotation("spill/read"):
+                leaves = self._host.get(int(slot))
+                if leaves is None:
+                    # a schedule bug or a reordered free — fail loudly
+                    # rather than silently contributing zero gradients
+                    raise KeyError(f"spill store: slot {int(slot)} read "
+                                   "before it was written (or after free)")
+                arrs = tuple(np.asarray(x) for x in leaves)
+                self._tally("read", slots=1,
+                            nbytes=sum(a.nbytes for a in arrs),
+                            base=int(slot))
+                return (np.float32(0),) + arrs
         return read
 
     def _cb_free(self, token, slot):
-        _SPILL_STATS["free_cb"] += 1
-        self._host.pop(int(slot), None)
+        with host_annotation("spill/free"):
+            self._host.pop(int(slot), None)
+            self._tally("free", slots=1, nbytes=0, base=int(slot))
         return np.float32(0)
 
     def _cb_write_batch(self, token, base, *stacked):
@@ -383,35 +498,38 @@ class SpillStore(CheckpointStore):
         entire batch and batch elements never alias: element b's
         checkpoints live at index b of its slot's block (the
         per-batch-element key scheme)."""
-        bnd = np.ndim(token)
-        seg = int(np.shape(stacked[0])[bnd])
-        _SPILL_STATS["write_cb"] += 1
-        _SPILL_STATS["write_slots"] += seg
-        base = int(np.ravel(base)[0])  # broadcast copies are identical
-        arrs = [np.asarray(x) for x in stacked]
-        sl = (slice(None),) * bnd
-        for i in range(seg):
-            self._host[base + i] = [a[sl + (i,)].copy() for a in arrs]
+        with host_annotation("spill/write_batch"):
+            bnd = np.ndim(token)
+            seg = int(np.shape(stacked[0])[bnd])
+            base = int(np.ravel(base)[0])  # broadcast copies are identical
+            arrs = [np.asarray(x) for x in stacked]
+            sl = (slice(None),) * bnd
+            for i in range(seg):
+                self._host[base + i] = [a[sl + (i,)].copy() for a in arrs]
+            self._tally("write", slots=seg,
+                        nbytes=sum(a.nbytes for a in arrs), base=base)
         return np.zeros(np.shape(token), np.float32)
 
     def _cb_prefetch(self, seg):
         def fetch(token, base):
-            _SPILL_STATS["read_cb"] += 1
-            _SPILL_STATS["read_slots"] += seg
-            _, sds = self._meta["idx"]
-            bshape = np.shape(token)  # mapped axes (see _cb_write_batch)
-            bnd = len(bshape)
-            base = int(np.ravel(base)[0])
-            sl = (slice(None),) * bnd
-            out = []
-            for k, s in enumerate(sds):
-                stack = np.zeros(bshape + (seg,) + tuple(s.shape), s.dtype)
-                for i in range(seg):
-                    leaves = self._host.get(base + i)
-                    if leaves is not None:  # missing slots read as zeros
-                        stack[sl + (i,)] = leaves[k]
-                out.append(stack)
-            return (np.zeros(bshape, np.float32),) + tuple(out)
+            with host_annotation("spill/prefetch"):
+                _, sds = self._meta["idx"]
+                bshape = np.shape(token)  # mapped axes (see _cb_write_batch)
+                bnd = len(bshape)
+                base = int(np.ravel(base)[0])
+                sl = (slice(None),) * bnd
+                out = []
+                for k, s in enumerate(sds):
+                    stack = np.zeros(bshape + (seg,) + tuple(s.shape),
+                                     s.dtype)
+                    for i in range(seg):
+                        leaves = self._host.get(base + i)
+                        if leaves is not None:  # missing slots -> zeros
+                            stack[sl + (i,)] = leaves[k]
+                    out.append(stack)
+                self._tally("read", slots=seg,
+                            nbytes=sum(a.nbytes for a in out), base=base)
+                return (np.zeros(bshape, np.float32),) + tuple(out)
         return fetch
 
     # -- metadata ------------------------------------------------------------

@@ -48,6 +48,29 @@ PyTree = Any
 
 
 @dataclass(frozen=True)
+class CandidateDecision:
+    """One row of the ``explain=True`` planner report: a candidate the
+    budget walk considered, whether it won, and — for every non-chosen
+    candidate — exactly why it was rejected or skipped."""
+    policy: str
+    ncheck: Optional[int]
+    offload: Optional[str]
+    predicted_peak_bytes: int
+    extra_fevals: int
+    chosen: bool
+    reason: str
+    measured_bytes: Optional[float] = None
+
+    def to_json(self) -> dict:
+        return {"policy": self.policy, "ncheck": self.ncheck,
+                "offload": self.offload,
+                "predicted_peak_bytes": self.predicted_peak_bytes,
+                "extra_fevals": self.extra_fevals, "chosen": self.chosen,
+                "reason": self.reason,
+                "measured_bytes": self.measured_bytes}
+
+
+@dataclass(frozen=True)
 class Plan:
     policy: str
     ncheck: Optional[int]
@@ -57,6 +80,10 @@ class Plan:
     fits: bool                      # predicted/measured peak <= budget
     measured_bytes: Optional[float] = None   # set in verify="measure"
     candidates: Tuple[CostEstimate, ...] = field(default=())
+    #: populated by ``plan_odeint(..., explain=True)``: one decision per
+    #: in-device candidate (same order as ``candidates``), plus the spill
+    #: fallback row when the walk fell through to it
+    report: Tuple[CandidateDecision, ...] = field(default=())
 
     @property
     def extra_fevals(self) -> int:
@@ -121,8 +148,16 @@ def plan_odeint(f: Callable, u0: PyTree, theta: PyTree, *, dt: float,
                 mem_budget: Optional[int] = None,
                 verify: str = "measure",
                 loss_fn: Optional[Callable] = None,
-                solver_opts: Optional[dict] = None) -> Plan:
+                solver_opts: Optional[dict] = None,
+                explain: bool = False) -> Plan:
     """Pick (policy, ncheck, offload) for one odeint call under a budget.
+
+    ``explain=True`` additionally fills ``Plan.report`` with one
+    ``CandidateDecision`` per candidate — same order as
+    ``Plan.candidates`` — stating for the winner why it was chosen and
+    for every other candidate why it was rejected (predicted or measured
+    peak over budget) or skipped (a cheaper-recompute candidate already
+    fit).  The walk itself is identical with or without ``explain``.
 
     ``loss_fn(u_final) -> scalar``: in ``verify="measure"`` mode the
     measured reverse pass is the gradient of THIS loss (the caller's
@@ -145,7 +180,15 @@ def plan_odeint(f: Callable, u0: PyTree, theta: PyTree, *, dt: float,
                           state_bytes=tree_bytes(u0),
                           theta_bytes=tree_bytes(theta),
                           **_solver_kw(solver_opts))
-        return Plan("pnode", None, None, est, None, True)
+        report = ()
+        if explain:
+            report = (CandidateDecision(
+                "pnode", None, None, int(est.peak_bytes),
+                int(est.extra_fevals), True,
+                "chosen: no mem_budget — paper-default pnode (zero "
+                "recompute beyond stage linearizations, bounded graph "
+                "depth)"),)
+        return Plan("pnode", None, None, est, None, True, report=report)
     if verify not in ("model", "measure"):
         raise ValueError(f"verify must be 'model' or 'measure', "
                          f"got {verify!r}")
@@ -157,32 +200,72 @@ def plan_odeint(f: Callable, u0: PyTree, theta: PyTree, *, dt: float,
                             f_act_bytes=fa, mem_budget=mem_budget,
                             solver_opts=solver_opts)
 
+    def _measure(cand) -> float:
+        return measure_reverse_cost(
+            f, u0, theta, dt=dt, n_steps=n_steps, t0=t0, method=method,
+            policy=cand.policy, ncheck=cand.ncheck, loss_fn=loss_fn,
+            solver_opts=solver_opts)["hlo_peak_bytes"]
+
+    # per-candidate outcome bookkeeping for the explain report:
+    # index -> (reason, measured_bytes or None)
+    status: dict = {}
+    chosen_idx: Optional[int] = None
     measured: Optional[float] = None
-    for cand in cands:
+    for i, cand in enumerate(cands):
         if cand.peak_bytes > mem_budget:
+            status[i] = (f"rejected: predicted peak {int(cand.peak_bytes)} B"
+                         f" > budget {mem_budget} B", None)
             continue
         if verify == "measure":
-            m = measure_reverse_cost(
-                f, u0, theta, dt=dt, n_steps=n_steps, t0=t0, method=method,
-                policy=cand.policy, ncheck=cand.ncheck, loss_fn=loss_fn,
-                solver_opts=solver_opts)["hlo_peak_bytes"]
+            m = _measure(cand)
             if m > mem_budget:
+                status[i] = (f"rejected: measured peak {int(m)} B > budget"
+                             f" {mem_budget} B", m)
                 continue
             measured = m
-        return Plan(cand.policy, cand.ncheck, None, cand, mem_budget, True,
-                    measured, tuple(cands))
+        chosen_idx = i
+        status[i] = ("chosen: cheapest extra-NFE-B candidate whose peak "
+                     "fits the budget", measured)
+        break
 
-    if verify == "measure":
+    if chosen_idx is None and verify == "measure":
         # the model ruled candidates out; re-walk against measurement in
         # case the model over-estimated (it is deliberately conservative)
-        for cand in cands:
-            m = measure_reverse_cost(
-                f, u0, theta, dt=dt, n_steps=n_steps, t0=t0, method=method,
-                policy=cand.policy, ncheck=cand.ncheck, loss_fn=loss_fn,
-                solver_opts=solver_opts)["hlo_peak_bytes"]
+        for i, cand in enumerate(cands):
+            m = _measure(cand)
             if m <= mem_budget:
-                return Plan(cand.policy, cand.ncheck, None, cand,
-                            mem_budget, True, m, tuple(cands))
+                chosen_idx = i
+                measured = m
+                status[i] = ("chosen: model over-estimated (predicted "
+                             f"{int(cand.peak_bytes)} B) but measured peak "
+                             f"{int(m)} B fits the budget", m)
+                break
+            if cand.peak_bytes > mem_budget:
+                status[i] = (f"rejected: predicted {int(cand.peak_bytes)} B"
+                             f" and measured {int(m)} B both exceed budget"
+                             f" {mem_budget} B", m)
+            # else: keep the walk-1 measured-rejection reason
+
+    def _report(spill_dec: Optional[CandidateDecision] = None):
+        if not explain:
+            return ()
+        rows = []
+        for i, cand in enumerate(cands):
+            reason, m = status.get(
+                i, ("skipped: a cheaper-recompute candidate already fit "
+                    "(candidates are ranked by extra NFE-B, then peak "
+                    "bytes)", None))
+            rows.append(CandidateDecision(
+                cand.policy, cand.ncheck, None, int(cand.peak_bytes),
+                int(cand.extra_fevals), i == chosen_idx, reason, m))
+        if spill_dec is not None:
+            rows.append(spill_dec)
+        return tuple(rows)
+
+    if chosen_idx is not None:
+        cand = cands[chosen_idx]
+        return Plan(cand.policy, cand.ncheck, None, cand, mem_budget, True,
+                    measured, tuple(cands), _report())
 
     # nothing fits on device: keep pnode's optimal NFE-B and move the
     # checkpoint storage off device through the spill store
@@ -198,13 +281,46 @@ def plan_odeint(f: Callable, u0: PyTree, theta: PyTree, *, dt: float,
             policy="pnode", offload="spill", loss_fn=loss_fn,
             solver_opts=solver_opts)["hlo_peak_bytes"]
         fits = measured <= mem_budget
+    spill_dec = None
+    if explain:
+        spill_dec = CandidateDecision(
+            "pnode", None, "spill", int(est.peak_bytes),
+            int(est.extra_fevals), True,
+            "chosen: fallback — no in-device candidate fits; spill keeps "
+            "NFE-B at pnode's optimum and moves checkpoint storage to host"
+            + ("" if fits else
+               " (best effort: even the spill working set exceeds the "
+               "budget)"),
+            measured)
     return Plan("pnode", None, "spill", est, mem_budget, fits, measured,
-                tuple(cands))
+                tuple(cands), _report(spill_dec))
 
 
 # ---------------------------------------------------------------------------
 # depth-level planning (the LM layer stack)
 # ---------------------------------------------------------------------------
+
+def depth_remat_live_bytes(cfg, cell, remat: str, ncheck: Optional[int],
+                           act_mult: float = 12.0) -> int:
+    """The depth planner's predicted live bytes for a chosen
+    (remat, ncheck) point — the number the launcher's metrics sink
+    compares against the measured compiled peak (drift check)."""
+    bytes_per = 2 if cfg.compute_dtype in ("bfloat16", "float16") else 4
+    state = cell.global_batch * cell.seq_len * cfg.d_model * bytes_per
+    act = int(act_mult * state)
+    n = cfg.n_layers
+    if remat == "none":
+        return n * act
+    if remat == "sqrt":
+        seg = max(1, int(math.sqrt(n)))
+        return (seg + math.ceil(n / seg)) * act
+    if remat == "full":
+        return n * state + act
+    if remat == "revolve":
+        k = ncheck or 1
+        return k * state + math.ceil(n / (k + 1)) * act
+    raise ValueError(f"unknown depth remat policy {remat!r}")
+
 
 def plan_depth_remat(cfg, cell, mem_budget: int,
                      act_mult: float = 12.0

@@ -1,0 +1,179 @@
+"""Host-side metrics registry: counters, gauges, and histograms that every
+layer of the stack reports through instead of inventing its own dict.
+
+Three metric kinds, all host-side Python state guarded by one re-entrant
+lock (callbacks fired from XLA's thread pool may run concurrently with a
+benchmark's ``reset()`` — see ``repro.mem.offload`` for the vmapped-chunk
+case that motivated the locking):
+
+  counter    monotonically increasing int (``inc``); host callbacks bump
+             these when they EXECUTE, so under jit the counts are the
+             measured runtime quantity, not a trace artifact;
+  gauge      last-written float (``set_gauge``) — e.g. the planner's
+             predicted peak bytes, a step's wall-clock;
+  histogram  running (count, sum, min, max) summary (``observe``) — cheap
+             enough to live in a hot host callback.
+
+``snapshot()`` returns plain dicts (JSON-ready, used by the MetricsSink);
+``reset()`` zeroes everything atomically.
+
+Jit-safe counting (``JitCounter`` / ``FevalCounter``)
+-----------------------------------------------------
+A Python-side ``registry.inc`` inside traced code runs at *trace* time —
+once per compilation, not once per execution.  ``JitCounter.tap(x)``
+threads ``x`` through an identity ``jax.pure_callback`` whose host side
+increments the counter, so compiled programs bump it once per runtime
+execution of the tap site.  ``FevalCounter`` (promoted here from
+``benchmarks/hotpath.py``) applies the tap to a vector field's ``t``
+argument to count runtime f evaluations.
+
+jax-0.4.37 caveat (unchanged from the hotpath original): ``pure_callback``
+execution counts are only trustworthy **under jit** — compiled programs
+execute the callback faithfully, while the eager tracing path may
+constant-fold it away; and even under jit counts can drift +-1 per call
+site across program variants (CSE merges same-``t`` tap sites, some
+variants run a site once extra).  The artifact-immune measurement is
+*invariance*: e.g. reverse NFE not growing with ``max_steps``
+(``benchmarks/hotpath.py`` asserts exactly that).
+"""
+from __future__ import annotations
+
+import threading
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class MetricsRegistry:
+    """Thread-safe named counters/gauges/histograms."""
+
+    def __init__(self):
+        self._lock = threading.RLock()
+        self._counters: Dict[str, int] = {}
+        self._gauges: Dict[str, float] = {}
+        self._hists: Dict[str, Dict[str, float]] = {}
+
+    # -- counters -----------------------------------------------------------
+    def inc(self, name: str, n: int = 1) -> None:
+        with self._lock:
+            self._counters[name] = self._counters.get(name, 0) + int(n)
+
+    def counter(self, name: str) -> int:
+        with self._lock:
+            return self._counters.get(name, 0)
+
+    # -- gauges -------------------------------------------------------------
+    def set_gauge(self, name: str, value: float) -> None:
+        with self._lock:
+            self._gauges[name] = float(value)
+
+    def gauge(self, name: str) -> Optional[float]:
+        with self._lock:
+            return self._gauges.get(name)
+
+    # -- histograms ---------------------------------------------------------
+    def observe(self, name: str, value: float) -> None:
+        value = float(value)
+        with self._lock:
+            h = self._hists.get(name)
+            if h is None:
+                h = {"count": 0, "sum": 0.0, "min": value, "max": value}
+                self._hists[name] = h
+            h["count"] += 1
+            h["sum"] += value
+            h["min"] = min(h["min"], value)
+            h["max"] = max(h["max"], value)
+
+    def histogram(self, name: str) -> Optional[Dict[str, float]]:
+        with self._lock:
+            h = self._hists.get(name)
+            return dict(h) if h is not None else None
+
+    # -- bulk ---------------------------------------------------------------
+    def snapshot(self) -> Dict[str, Dict]:
+        """JSON-ready copy of every metric."""
+        with self._lock:
+            return {
+                "counters": dict(self._counters),
+                "gauges": dict(self._gauges),
+                "histograms": {k: dict(v) for k, v in self._hists.items()},
+            }
+
+    def reset(self) -> None:
+        with self._lock:
+            self._counters.clear()
+            self._gauges.clear()
+            self._hists.clear()
+
+
+#: process-wide default registry (the one ``spill_stats`` mirrors into and
+#: the benchmarks snapshot); library code takes an explicit registry and
+#: defaults to this one
+DEFAULT_REGISTRY = MetricsRegistry()
+
+
+def default_registry() -> MetricsRegistry:
+    return DEFAULT_REGISTRY
+
+
+class JitCounter:
+    """Count runtime executions of a tap site inside compiled programs.
+
+    ``tap(x)`` returns ``x`` routed through an identity ``pure_callback``
+    whose host side increments this counter (and, when a registry is
+    given, the registry counter of the same name).  Because the tap is an
+    identity on a *non-differentiated* value, wrapping a computation with
+    it linearizes exactly like the original — gradients are unchanged.
+
+    The tapped value must feed the downstream computation, or XLA
+    dead-codes the callback away.  Counts are only trustworthy under jit
+    (see module docstring for the jax-0.4.37 eager/CSE caveats).
+    """
+
+    def __init__(self, name: str = "jit_counter",
+                 registry: Optional[MetricsRegistry] = None):
+        self.name = name
+        self.count = 0
+        self._registry = registry
+
+    def reset(self) -> None:
+        self.count = 0
+
+    def _bump(self, x):
+        self.count += 1
+        if self._registry is not None:
+            self._registry.inc(self.name)
+        return np.asarray(x)
+
+    def tap(self, x):
+        return jax.pure_callback(
+            self._bump,
+            jax.ShapeDtypeStruct(jnp.shape(x), jnp.result_type(x)), x)
+
+
+class FevalCounter:
+    """Wrap a vector field so each runtime evaluation bumps a host counter
+    (identity pure_callback on t — on the non-diff path, so the wrapped f
+    linearizes exactly like the original).  Only trustworthy under jit:
+    compiled programs execute the callback faithfully, the eager tracing
+    path may constant-fold it away (jax 0.4.37), and counts can drift +-1
+    per call site (CSE/elision) — max_steps-invariance is the
+    artifact-immune check (see ``benchmarks/hotpath.py``).  The wrapped f
+    must actually USE t, or XLA dead-codes the tap."""
+
+    def __init__(self, f: Callable, name: str = "nfe",
+                 registry: Optional[MetricsRegistry] = None):
+        self._f = f
+        self._tap = JitCounter(name, registry)
+
+    @property
+    def count(self) -> int:
+        return self._tap.count
+
+    def reset(self) -> None:
+        self._tap.reset()
+
+    def __call__(self, u, theta, t):
+        return self._f(u, theta, self._tap.tap(t))
