@@ -1,0 +1,249 @@
+"""Benchmark 5: chaos — train and differentiate under an injected fault
+schedule, and prove recovery is *exact*, not just "doesn't crash".
+
+Three layers, one deterministic ``repro.ft.FaultPlan`` each:
+
+  solver   a Robertson ensemble gradient through the scanned pnode+spill
+           path with the acceptance-criteria schedule — one NaN-poisoned
+           f-eval step, one forced Newton divergence, one corrupted spill
+           payload, one transient read flake — under
+           ``rescue=True, resilient=True``.  The gates pin: gradients
+           bitwise-identical to the fault-free run (rescue retries
+           converge to the same bits; the corrupted segment is recomputed
+           from its entry state), exactly 2 rescued steps, >= 1 integrity
+           failure detected, >= 1 read retry, and the host-callback count
+           unchanged by all of it.
+
+  train    the LM loop under ``launch.train``'s sentinel: a single
+           poisoned step is skipped and retried (loss curve bitwise equal
+           to fault-free), and a 3-step poison window forces one rollback
+           to the last committed checkpoint with an exact replay.
+
+  adaptive the Dopri5 controller under NaN-poisoned attempts: the solve
+           completes with finite output, the poisoned attempts show up as
+           rejections (recovery here is convergent, not bitwise — the
+           step-size trajectory legitimately changes).
+
+Counter reads sit behind ``jax.block_until_ready`` (jitted calls return
+before host callbacks run), and the faulted gradient is measured WITHOUT a
+warmup call: the fault plan's host-side ticks are keyed by callback
+execution index, so the first execution must be the measured one.
+"""
+import json
+import sys
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.core.adaptive import odeint_adaptive
+from repro.core.implicit import odeint_implicit
+from repro.ft import FaultPlan, FaultSpec
+from repro.mem.offload import reset_spill_stats, spill_stats
+from repro.obs import (DEFAULT_REGISTRY, BaselineRef, Gate,
+                       check_against_baseline as _obs_check)
+
+from benchmarks.stiff_ensemble import robertson_vf
+
+N_STEPS = 16
+SEGMENT = 4
+DT = 0.01
+
+
+def _newton_faults():
+    # the acceptance-criteria schedule: one NaN step + one forced Newton
+    # divergence, both keyed by absolute step index so adjoint recomputes
+    # re-fire (and re-rescue) them identically
+    return [FaultSpec("newton", 2, "nan"),
+            FaultSpec("newton", 9, "diverge")]
+
+
+def _loss(c, u0s, *, fault_plan=None, rescue=None, resilient=False):
+    def solve(u, ci):
+        return odeint_implicit(robertson_vf, u, ci, dt=DT, n_steps=N_STEPS,
+                               method="cn", adjoint="pnode", offload="spill",
+                               offload_segment=SEGMENT, newton_iters=16,
+                               newton_tol=1e-10, gmres_iters=5,
+                               gmres_tol=1e-12, fault_plan=fault_plan,
+                               rescue=rescue, resilient=resilient)
+
+    uf = jax.vmap(solve)(u0s, c)
+    return jnp.mean(jnp.sum(uf ** 2, axis=-1))
+
+
+def run_solver_chaos(batch=32, seed=0):
+    u0s = jnp.tile(jnp.array([1.0, 0.0, 0.0]), (batch, 1))
+    c = 0.1 * jax.random.normal(jax.random.PRNGKey(seed), (batch, 3))
+
+    # fault-free reference: the plain PR-6 spill path, no recovery knobs
+    g_clean = jax.jit(jax.grad(lambda cc: _loss(cc, u0s)))(c)
+    jax.block_until_ready(g_clean)
+
+    # full schedule: solver faults + storage faults, all recovery on
+    plan = FaultPlan(_newton_faults() + [
+        FaultSpec("spill.write", 1, "corrupt"),  # segment 1's payload
+        FaultSpec("spill.read", 0, "flake"),     # transient: one retry
+    ])
+    faulted = jax.jit(jax.grad(
+        lambda cc: _loss(cc, u0s, fault_plan=plan, rescue=True,
+                         resilient=True)))
+    reset_spill_stats()
+    g_fault = faulted(c)  # NO warmup: tick indices must start at 0
+    jax.block_until_ready(g_fault)
+    io = spill_stats()
+
+    # rescued-step count from the stats plumbing (fresh plan instance so
+    # the storage tick counters above stay undisturbed)
+    plan_stats = FaultPlan(_newton_faults())
+    _, stats = jax.jit(jax.vmap(lambda u, ci: odeint_implicit(
+        robertson_vf, u, ci, dt=DT, n_steps=N_STEPS, method="cn",
+        newton_iters=16, newton_tol=1e-10, gmres_iters=5, gmres_tol=1e-12,
+        fault_plan=plan_stats, rescue=True, return_stats=True)))(u0s, c)
+
+    return {
+        "n_steps": N_STEPS,
+        "segment": SEGMENT,
+        "ensemble": int(batch),
+        "faults_fired": int(plan.fired_count()),
+        "grads_bitwise": bool(np.array_equal(np.asarray(g_fault),
+                                             np.asarray(g_clean))),
+        "rescued_per_solve": int(np.max(np.asarray(stats.rescued))),
+        "diverged": bool(np.any(np.asarray(stats.diverged))),
+        "integrity_failures": int(io["integrity_fail"]),
+        "read_retries": int(io["retry_cb"]),
+        "callbacks_per_grad": int(io["write_cb"] + io["read_cb"]),
+    }
+
+
+def run_train_chaos(steps=8, ckpt_every=4):
+    from repro.configs.base import ShapeCell, reduced
+    from repro.configs.registry import get_arch
+    from repro.launch.train import train
+
+    cfg = reduced(get_arch("smollm-135m"), n_layers=2)
+    cell = ShapeCell("chaos", 32, 2, "train")
+    quiet = lambda *a, **k: None
+
+    with tempfile.TemporaryDirectory() as tmp:
+        clean = train(cfg, cell, steps=steps, ckpt_dir=f"{tmp}/clean",
+                      ckpt_every=ckpt_every, log_fn=quiet)
+
+        # one poisoned attempt: skipped, retried clean, curve bitwise
+        skip = train(cfg, cell, steps=steps, ckpt_dir=f"{tmp}/skip",
+                     ckpt_every=ckpt_every, log_fn=quiet,
+                     fault_plan=FaultPlan(
+                         [FaultSpec("train.step", 3, "nan")]))
+
+        # K consecutive poisoned attempts: rollback + exact replay
+        k = 3
+        roll = train(cfg, cell, steps=steps, ckpt_dir=f"{tmp}/roll",
+                     ckpt_every=ckpt_every, log_fn=quiet,
+                     sentinel_bad_steps=k, fault_plan=FaultPlan(
+                         [FaultSpec("train.step", ckpt_every + 1, "nan",
+                                    count=k)]))
+
+    return {
+        "steps": int(steps),
+        "skip_run": {
+            "skipped_steps": int(skip["skipped_steps"]),
+            "rollbacks": int(skip["rollbacks"]),
+            "losses_equal": bool(skip["losses"] == clean["losses"]),
+        },
+        "rollback_run": {
+            "skipped_steps": int(roll["skipped_steps"]),
+            "rollbacks": int(roll["rollbacks"]),
+            "losses_equal": bool(roll["losses"] == clean["losses"]),
+        },
+    }
+
+
+def run_adaptive_chaos():
+    def f(u, th, t):
+        return -th * u
+
+    u0 = jnp.ones(4)
+    th = jnp.asarray(0.9)
+    plan = FaultPlan([FaultSpec("adaptive", 2, "nan", count=2)])
+    uf, info = odeint_adaptive(f, u0, th, t0=0.0, t1=1.0, max_steps=64,
+                               fault_plan=plan)
+    uf_clean, _ = odeint_adaptive(f, u0, th, t0=0.0, t1=1.0, max_steps=64)
+    return {
+        "finite": bool(np.all(np.isfinite(np.asarray(uf)))),
+        "completed": bool(int(info.n_accepted) > 0),
+        "n_rejected": int(info.n_rejected),
+        "endpoint_close": bool(np.allclose(np.asarray(uf),
+                                           np.asarray(uf_clean),
+                                           rtol=1e-5)),
+    }
+
+
+GATES = [
+    Gate("grads_bitwise", "solver.grads_bitwise", "truthy",
+         message="post-recovery gradients are not bitwise-identical to "
+                 "the fault-free run"),
+    Gate("rescued", "solver.rescued_per_solve", "==",
+         BaselineRef("rescued_per_solve"),
+         message="rescued-step count drifted from the injected schedule"),
+    Gate("not_diverged", "solver.diverged", "falsy",
+         message="a rescued solve still reports divergence"),
+    Gate("integrity", "solver.integrity_failures", ">=",
+         BaselineRef("min_integrity_failures"),
+         message="the corrupted spill payload was not detected"),
+    Gate("retries", "solver.read_retries", ">=",
+         BaselineRef("min_read_retries"),
+         message="the transient read flake was not retried"),
+    Gate("callbacks", "solver.callbacks_per_grad", "<=",
+         BaselineRef("max_callbacks_per_grad"),
+         message="recovery added host callbacks to the gradient"),
+    Gate("train_skip_curve", "train.skip_run.losses_equal", "truthy",
+         message="loss curve after a skipped step is not bitwise the "
+                 "fault-free curve"),
+    Gate("train_skipped", "train.skip_run.skipped_steps", "==",
+         BaselineRef("expected_skipped"),
+         message="sentinel skip count drifted from the injected schedule"),
+    Gate("train_rollback_curve", "train.rollback_run.losses_equal",
+         "truthy", message="loss curve after rollback+replay is not "
+                           "bitwise the fault-free curve"),
+    Gate("train_rollbacks", "train.rollback_run.rollbacks", "==",
+         BaselineRef("expected_rollbacks"),
+         message="rollback count drifted from the injected schedule"),
+    Gate("adaptive_finite", "adaptive.finite", "truthy",
+         message="adaptive solve went non-finite under poisoned attempts"),
+    Gate("adaptive_rejected", "adaptive.n_rejected", ">=",
+         BaselineRef("min_adaptive_rejected"),
+         message="poisoned adaptive attempts were not rejected"),
+]
+
+
+def check_against_baseline(rec, baseline_path="benchmarks/"
+                           "bench5_baseline.json"):
+    """Regression gates for CI; returns a list of error strings."""
+    return _obs_check(rec, GATES, baseline_path, bench="chaos",
+                      registry=DEFAULT_REGISTRY)
+
+
+def main(smoke=False, out_path="BENCH_5.json", check=False):
+    rec = {
+        "solver": run_solver_chaos(batch=32 if smoke else 128),
+        "train": run_train_chaos(steps=8 if smoke else 12),
+        "adaptive": run_adaptive_chaos(),
+        "smoke": bool(smoke),
+    }
+    with open(out_path, "w") as fh:
+        json.dump(rec, fh, indent=2)
+    print(json.dumps(rec, indent=2))
+    if check:
+        errs = check_against_baseline(rec)
+        if errs:
+            for e in errs:
+                print(f"BENCH_5 REGRESSION: {e}", file=sys.stderr)
+            raise SystemExit(1)
+        print("BENCH_5: all regression gates passed")
+    return rec
+
+
+if __name__ == "__main__":
+    main(smoke="--smoke" in sys.argv, check="--check" in sys.argv)

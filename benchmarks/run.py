@@ -4,11 +4,14 @@
   PYTHONPATH=src python -m benchmarks.run --full     # full sweeps
   PYTHONPATH=src python -m benchmarks.run --smoke    # CI: mem_plan +
                                                     # hotpath +
-                                                    # stiff_ensemble;
-                                                    # writes BENCH_2/3/4
+                                                    # stiff_ensemble +
+                                                    # chaos; writes
+                                                    # BENCH_2/3/4/5
                                                     # .json, fails on
-                                                    # host-callback or
-                                                    # NFE-B regressions
+                                                    # host-callback,
+                                                    # NFE-B, or fault-
+                                                    # recovery
+                                                    # regressions
 """
 from __future__ import annotations
 
@@ -20,7 +23,7 @@ def main() -> None:
     full = "--full" in sys.argv
 
     if "--smoke" in sys.argv:
-        from benchmarks import hotpath, mem_plan, stiff_ensemble
+        from benchmarks import chaos, hotpath, mem_plan, stiff_ensemble
         from repro.obs import DEFAULT_REGISTRY, MetricsSink
         t0 = time.time()
         # METRICS.jsonl: per-section structured records + the unified
@@ -53,6 +56,20 @@ def main() -> None:
                 grads_bitwise_vs_device=rec4["grads_bitwise_vs_device"],
                 diverged_fraction=rec4["diverged_fraction"],
                 losses=rec4["losses"])
+            t3 = time.time()
+            rec5 = chaos.main(smoke=True, check=True)
+            sink.emit(
+                "bench.section", section="chaos",
+                elapsed_s=time.time() - t3,
+                grads_bitwise=rec5["solver"]["grads_bitwise"],
+                rescued_per_solve=rec5["solver"]["rescued_per_solve"],
+                integrity_failures=rec5["solver"]["integrity_failures"],
+                read_retries=rec5["solver"]["read_retries"],
+                callbacks_per_grad=rec5["solver"]["callbacks_per_grad"],
+                train_skip_bitwise=rec5["train"]["skip_run"][
+                    "losses_equal"],
+                train_rollback_bitwise=rec5["train"]["rollback_run"][
+                    "losses_equal"])
             sink.emit("bench.gates",
                       **{k: v for k, v in
                          DEFAULT_REGISTRY.snapshot()["counters"].items()
@@ -60,9 +77,9 @@ def main() -> None:
         print(f"\n== bench smoke done in {time.time()-t0:.1f}s ==")
         return
 
-    from benchmarks import (adjoint_discrepancy, cnf_tables, fig3_memory,
-                            hotpath, mem_plan, roofline, stiff_ensemble,
-                            stiff_table8, table2_costs)
+    from benchmarks import (adjoint_discrepancy, chaos, cnf_tables,
+                            fig3_memory, hotpath, mem_plan, roofline,
+                            stiff_ensemble, stiff_table8, table2_costs)
 
     sections = [
         ("adjoint_discrepancy (Table 1 / Prop 1)",
@@ -76,6 +93,7 @@ def main() -> None:
         ("hotpath (reverse-pass hot path / BENCH_3.json)", hotpath.main),
         ("stiff_ensemble (vmapped implicit under budget / BENCH_4.json)",
          stiff_ensemble.main),
+        ("chaos (fault injection + recovery / BENCH_5.json)", chaos.main),
         ("roofline (EXPERIMENTS Roofline)", roofline.main),
     ]
 

@@ -1,4 +1,6 @@
-from repro.ckpt.checkpoint import (CheckpointManager, load_checkpoint,
+from repro.ckpt.checkpoint import (CheckpointManager, CheckpointWriteError,
+                                   available_steps, load_checkpoint,
                                    save_checkpoint)
 
-__all__ = ["CheckpointManager", "save_checkpoint", "load_checkpoint"]
+__all__ = ["CheckpointManager", "CheckpointWriteError", "available_steps",
+           "save_checkpoint", "load_checkpoint"]

@@ -32,7 +32,15 @@ import jax.numpy as jnp
 import numpy as np
 from jax import tree_util as jtu
 
+from repro.ft.inject import SimulatedPreemption
+
 SEP = "::"
+
+
+class CheckpointWriteError(RuntimeError):
+    """A background checkpoint commit failed.  Raised on the training
+    thread at the next ``save``/``wait``/restore — a full disk (or any
+    other commit failure) must not silently disable checkpointing."""
 
 
 def _flatten_with_paths(tree):
@@ -54,8 +62,16 @@ def _path_part(p) -> str:
     return str(p)
 
 
-def save_checkpoint(directory: str | Path, step: int, tree: Any) -> Path:
-    """Synchronous sharded save.  Returns the committed checkpoint path."""
+def save_checkpoint(directory: str | Path, step: int, tree: Any,
+                    fault_plan=None) -> Path:
+    """Synchronous sharded save.  Returns the committed checkpoint path.
+
+    ``fault_plan=`` (a ``repro.ft.FaultPlan``) is the chaos hook: site
+    ``"ckpt.write"`` fires after the data files are staged but before the
+    DONE marker — kind ``preempt`` raises ``SimulatedPreemption`` and
+    deliberately leaves the uncommitted ``.tmp_step_*`` directory behind
+    (a real SIGKILL runs no cleanup), kind ``error`` raises ``OSError``
+    (a full disk) through the normal cleanup path."""
     directory = Path(directory)
     directory.mkdir(parents=True, exist_ok=True)
     final = directory / f"step_{step:010d}"
@@ -71,10 +87,22 @@ def save_checkpoint(directory: str | Path, step: int, tree: Any) -> Path:
                                    "dtype": str(arr.dtype)}
         np.savez(tmp / "arrays.npz", **arrays)
         (tmp / "tree.json").write_text(json.dumps(meta))
+        if fault_plan is not None:
+            spec = fault_plan.tick("ckpt.write")
+            if spec is not None and spec.kind == "preempt":
+                raise SimulatedPreemption(
+                    f"injected preemption mid-write of step {step}")
+            if spec is not None and spec.kind == "error":
+                raise OSError(f"injected commit failure at step {step} "
+                              "(disk full)")
         (tmp / "DONE").write_text(str(time.time()))
         if final.exists():
             shutil.rmtree(final)
         os.replace(tmp, final)
+    except SimulatedPreemption:
+        # a simulated SIGKILL runs no handlers: keep the stale tmp dir so
+        # recovery (ignore it + clean on next manager init) gets exercised
+        raise
     except BaseException:
         shutil.rmtree(tmp, ignore_errors=True)
         raise
@@ -112,6 +140,12 @@ def load_checkpoint(directory: str | Path, template: Any,
     def restore_leaf(path_, leaf):
         key = SEP.join(_path_part(p) for p in path_)
         arr = data[key]
+        if hasattr(leaf, "shape") and tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(
+                f"checkpoint leaf {key!r} has shape {tuple(arr.shape)} but "
+                f"the restore template expects {tuple(leaf.shape)} — the "
+                "checkpoint was written by a different model config/mesh "
+                "than this job is running")
         want_dtype = leaf.dtype if hasattr(leaf, "dtype") else arr.dtype
         arr = arr.astype(want_dtype)
         sh = flat_shardings.get(key)
@@ -142,30 +176,58 @@ class CheckpointManager:
     the training step off the I/O critical path.  ``wait`` joins outstanding
     writes (call before exit/restore).  Retention keeps the newest ``keep_n``
     committed checkpoints.
+
+    A failed background commit is NOT swallowed: the exception is captured
+    per-thread and re-raised (wrapped in ``CheckpointWriteError``) on the
+    next ``save``/``wait``/restore call, then cleared.  Stale
+    ``.tmp_step_*`` directories from a previous job killed mid-write are
+    cleaned up on init (restore already ignores them: no DONE marker).
     """
 
     def __init__(self, directory: str | Path, keep_n: int = 3,
-                 async_write: bool = True):
+                 async_write: bool = True, fault_plan=None):
         self.directory = Path(directory)
         self.keep_n = keep_n
         self.async_write = async_write
+        self.fault_plan = fault_plan
         self._lock = threading.Lock()
         self._pending: list[threading.Thread] = []
+        self._errors: list[tuple[int, BaseException]] = []
         self.saved_steps: list[int] = available_steps(self.directory)
+        for stale in self.directory.glob(".tmp_step_*"):
+            shutil.rmtree(stale, ignore_errors=True)
+
+    def _raise_pending_errors(self) -> None:
+        with self._lock:
+            errs, self._errors = self._errors, []
+        if errs:
+            step, exc = errs[0]
+            raise CheckpointWriteError(
+                f"{len(errs)} background checkpoint commit(s) failed; "
+                f"first failure at step {step}: {exc!r}") from exc
 
     def save(self, step: int, tree: Any) -> None:
+        self._raise_pending_errors()
         host_tree = jtu.tree_map(lambda x: np.asarray(jax.device_get(x)),
                                  tree)
 
         def commit():
-            save_checkpoint(self.directory, step, host_tree)
+            save_checkpoint(self.directory, step, host_tree,
+                            fault_plan=self.fault_plan)
             with self._lock:
                 self.saved_steps.append(step)
                 self.saved_steps = sorted(set(self.saved_steps))
                 self._retain()
 
         if self.async_write:
-            t = threading.Thread(target=commit, daemon=True)
+            def commit_captured():
+                try:
+                    commit()
+                except BaseException as exc:  # incl. SimulatedPreemption
+                    with self._lock:
+                        self._errors.append((step, exc))
+
+            t = threading.Thread(target=commit_captured, daemon=True)
             t.start()
             self._pending = [th for th in self._pending if th.is_alive()]
             self._pending.append(t)
@@ -182,6 +244,7 @@ class CheckpointManager:
         for t in self._pending:
             t.join()
         self._pending = []
+        self._raise_pending_errors()
 
     def restore_latest(self, template: Any, shardings: Any = None):
         self.wait()

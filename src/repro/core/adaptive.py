@@ -83,7 +83,7 @@ def odeint_adaptive(f: VectorField, u0: PyTree, theta: PyTree, *,
                     offload: str | None = None,
                     offload_segment: int | None = None,
                     fused_stages: bool = False,
-                    obs=None):
+                    obs=None, fault_plan=None):
     """Adaptive solve from t0 to t1; differentiable (discrete adjoint over
     accepted steps).  Returns (u_final, AdaptiveInfo).  ``offload="spill"``
     replaces the preallocated ring buffer with a host-side checkpoint store
@@ -98,7 +98,19 @@ def odeint_adaptive(f: VectorField, u0: PyTree, theta: PyTree, *,
     spill store's callbacks record per-segment ``spill.*`` traffic.  The
     taps are ``jax.debug.callback`` effects: no op feeds the computation,
     so gradients are bitwise-identical to ``obs=None`` (which traces no
-    tap at all — zero overhead when off)."""
+    tap at all — zero overhead when off).
+
+    ``fault_plan=`` (a ``repro.ft.FaultPlan``) injects NaN-poisoned f
+    evaluations at chosen *attempt* indices (site ``"adaptive"``, kind
+    ``"nan"``).  The controller is written to survive them without help: a
+    NaN error norm rejects the attempt (``NaN <= 1.0`` is False), the
+    non-finite PI factor falls back to the minimum shrink (0.2) instead of
+    poisoning every later step size, and a total-attempt cap bounds the
+    reject loop — so once the fault window passes, integration resumes at
+    a smaller h (recovery here is convergent, not bitwise: the step-size
+    trajectory legitimately differs from the fault-free run).  The
+    ``adaptive.step`` obs stream records each poisoned attempt
+    (``err_norm`` NaN, ``accept`` False)."""
     if method != "dopri5":
         raise ValueError("adaptive integration currently supports dopri5")
     if offload not in (None, "device", "spill"):
@@ -109,13 +121,19 @@ def odeint_adaptive(f: VectorField, u0: PyTree, theta: PyTree, *,
         raise ValueError(
             "offload_segment only applies to the callback spill tier "
             f"(offload='spill'); got offload={offload!r}")
+    if offload == "spill" and fault_plan is not None:
+        # tier outage: the scanned ring buffer degrades spill -> device
+        from repro.mem.offload import effective_tier
+        if effective_tier("spill", fault_plan, scanned=True,
+                          obs=obs) != "spill":
+            offload = None
     store = None
     segment = 1
     if offload == "spill":
         from repro.core.adjoint import _reject_vmap_offload
         from repro.mem.offload import default_segment, make_store
         _reject_vmap_offload(u0, theta, "odeint_adaptive")
-        store = make_store("spill")
+        store = make_store("spill", fault_plan=fault_plan)
         segment = (int(offload_segment) if offload_segment is not None
                    else default_segment(int(max_steps)))
         segment = max(1, min(segment, int(max_steps)))
@@ -131,21 +149,23 @@ def odeint_adaptive(f: VectorField, u0: PyTree, theta: PyTree, *,
     u_final, info = _odeint_adaptive(f, float(t0), float(t1), float(rtol),
                                      float(atol), int(max_steps),
                                      float(h_init), store, segment,
-                                     bool(fused_stages), obs, u0, theta)
+                                     bool(fused_stages), obs, fault_plan,
+                                     u0, theta)
     return u_final, info
 
 
 @functools.partial(jax.custom_vjp,
-                   nondiff_argnums=(0, 1, 2, 3, 4, 5, 6, 7, 8, 9, 10))
+                   nondiff_argnums=(0, 1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11))
 def _odeint_adaptive(f, t0, t1, rtol, atol, max_steps, h0, store, segment,
-                     fused, obs, u0, theta):
+                     fused, obs, fault, u0, theta):
     out, _res = _adaptive_fwd_solve(f, t0, t1, rtol, atol, max_steps, h0,
-                                    store, fused, u0, theta, obs=obs)
+                                    store, fused, u0, theta, obs=obs,
+                                    fault=fault)
     return out
 
 
 def _adaptive_fwd_solve(f, t0, t1, rtol, atol, max_steps, h0, store, fused,
-                        u0, theta, obs=None):
+                        u0, theta, obs=None, fault=None):
     tab = DOPRI5
     s = tab.num_stages
     order = tab.order
@@ -168,12 +188,28 @@ def _adaptive_fwd_solve(f, t0, t1, rtol, atol, max_steps, h0, store, fused,
 
     def cond(carry):
         u, t, h, n_acc, n_rej, bufs, err_prev = carry
-        return jnp.logical_and(t < t1 - 1e-14, n_acc < max_steps)
+        # the total-attempt cap bounds the reject loop: a persistently
+        # rejecting step (e.g. poisoned f-evals) can no longer hang the
+        # while_loop — it exits with t short of t1, which the caller sees
+        # in the counters.  Never binds on a healthy solve (rejections
+        # would have to outnumber accepts 7:1 at the accept cap).
+        return jnp.logical_and(
+            jnp.logical_and(t < t1 - 1e-14, n_acc < max_steps),
+            n_acc + n_rej < 8 * max_steps)
 
     def body(carry):
         u, t, h, n_acc, n_rej, bufs, err_prev = carry
         h = jnp.minimum(h, t1 - t)
-        ks = rk_stages(f, tab, u, theta, t, h, fused=fused)
+        f_step = f
+        if fault is not None:
+            bad = fault.traced_gate("adaptive", "nan", n_acc + n_rej)
+            if bad is not False:
+                def f_step(uu, th, tt):
+                    out = f(uu, th, tt)
+                    return jtu.tree_map(
+                        lambda x: jnp.where(bad, jnp.full_like(x, jnp.nan),
+                                            x), out)
+        ks = rk_stages(f_step, tab, u, theta, t, h, fused=fused)
         u_new = rk_combine(tab, u, ks, h, fused=fused)
         # embedded error estimate
         err = None
@@ -195,6 +231,11 @@ def _adaptive_fwd_solve(f, t0, t1, rtol, atol, max_steps, h0, store, fused,
         # PI controller (Hairer-Norsett-Wanner II.4): alpha=0.7/p, beta=0.4/p
         alpha, beta = 0.7 / order, 0.4 / order
         factor = 0.9 * (enorm + 1e-10) ** (-alpha) * (err_prev + 1e-10) ** (beta)
+        # a NaN/Inf error norm (poisoned f-evals) must not poison the step
+        # size forever: fall back to the maximum shrink so the retry probes
+        # a smaller h.  Bitwise-neutral when factor is finite.
+        factor = jnp.where(jnp.isfinite(factor), factor,
+                           jnp.asarray(0.2, factor.dtype))
         factor = jnp.clip(factor, 0.2, 5.0)
         h_next = h * jnp.where(accept, factor, jnp.minimum(factor, 1.0))
 
@@ -233,15 +274,16 @@ def _adaptive_fwd_solve(f, t0, t1, rtol, atol, max_steps, h0, store, fused,
 
 @scope("adaptive/fwd")
 def _odeint_adaptive_fwd(f, t0, t1, rtol, atol, max_steps, h0, store,
-                         segment, fused, obs, u0, theta):
+                         segment, fused, obs, fault, u0, theta):
     out, res = _adaptive_fwd_solve(f, t0, t1, rtol, atol, max_steps, h0,
-                                   store, fused, u0, theta, obs=obs)
+                                   store, fused, u0, theta, obs=obs,
+                                   fault=fault)
     return out, res
 
 
 @scope("adaptive/bwd")
 def _odeint_adaptive_bwd(f, t0, t1, rtol, atol, max_steps, h0, store,
-                         segment, fused, obs, res, g):
+                         segment, fused, obs, fault, res, g):
     tab = DOPRI5
     if obs is not None:
         obs.record("adaptive.adjoint", max_steps=max_steps,

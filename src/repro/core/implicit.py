@@ -133,28 +133,56 @@ class ImplicitStats(NamedTuple):
     diverged: jax.Array      # any step exited on newton_iters with r > tol
     max_residual: jax.Array  # worst final Newton residual across steps
     newton_iters: jax.Array  # total Newton iterations over the solve
+    rescued: jax.Array       # steps recovered by a rescue retry (PR 8)
+
+
+class RescueConfig(NamedTuple):
+    """Divergence-rescue knobs (``odeint_implicit(rescue=...)``).
+
+    On a failed step (Newton exhausted its iteration cap, or a non-finite
+    state — e.g. an injected NaN f-eval), the step is retried with an
+    ESCALATED iteration cap: retry r gets ``newton_iters * escalate**r``
+    iterations.  Key property: the Newton ``while_loop`` exits dynamically
+    on ``residual <= tol``, so a retry that converges where the fault-free
+    run would have converged produces **bit-identical** values — the
+    escalated cap only matters when it binds.  ``dt_halving`` adds a last
+    resort after all retries: two h/2 sub-steps (theta-method order is
+    preserved; values are NOT bitwise the single-step ones, so it only
+    runs when everything bitwise-preserving already failed)."""
+    max_retries: int = 1
+    escalate: int = 4
+    dt_halving: bool = True
 
 
 class _SolverConfig(NamedTuple):
-    """Static (hashable) solver knobs — a single nondiff custom_vjp arg."""
+    """Static (hashable) solver knobs — a single nondiff custom_vjp arg.
+    ``rescue``/``fault``/``resilient`` default off: dormant configs build
+    the exact pre-PR-8 trace (``_step`` stages no gates, the spill
+    residuals carry no boundary states)."""
     theta: float
     newton_iters: int
     newton_tol: float
     gmres_iters: int
     gmres_tol: float
+    rescue: Any = None       # RescueConfig | None
+    fault: Any = None        # repro.ft.FaultPlan | None
+    resilient: bool = False  # checked prefetch + recompute fallback
 
 
 def _stats_zero() -> ImplicitStats:
     return ImplicitStats(jnp.zeros((), jnp.bool_),
                          jnp.zeros((), jnp.result_type(float)),
+                         jnp.zeros((), jnp.int32),
                          jnp.zeros((), jnp.int32))
 
 
-def _stats_merge(stats: ImplicitStats, info: StepInfo) -> ImplicitStats:
+def _stats_merge(stats: ImplicitStats, info: StepInfo,
+                 rescued=None) -> ImplicitStats:
     return ImplicitStats(
         jnp.logical_or(stats.diverged, jnp.logical_not(info.converged)),
         jnp.maximum(stats.max_residual, info.residual),
-        stats.newton_iters + info.iters.astype(jnp.int32))
+        stats.newton_iters + info.iters.astype(jnp.int32),
+        stats.rescued if rescued is None else stats.rescued + rescued)
 
 
 # ---------------------------------------------------------------------------
@@ -237,9 +265,102 @@ def implicit_adjoint_step(f: VectorField, u_n: PyTree, u_next: PyTree,
     return lam_prev, th_bar
 
 
-def _step(f, cfg: _SolverConfig, u, theta_p, t_n, h):
-    return implicit_step(f, u, theta_p, t_n, h, cfg.theta, cfg.newton_iters,
-                         cfg.newton_tol, cfg.gmres_iters, cfg.gmres_tol)
+def _tree_allfinite(tree):
+    fin = jnp.ones((), jnp.bool_)
+    for x in jtu.tree_leaves(tree):
+        fin = jnp.logical_and(fin, jnp.all(jnp.isfinite(x)))
+    return fin
+
+
+def _rescued_step(f, cfg: _SolverConfig, u, theta_p, t_n, h, idx):
+    """One implicit step under fault injection and/or divergence rescue.
+
+    Attempt 0 runs at the configured iteration cap; planned faults (keyed
+    by the traced step index ``idx``, so they re-fire identically on
+    adjoint recomputes) poison its *exit state* — NaN/Inf ``u1`` or a
+    forced non-converged flag.  Poisoning the result rather than wrapping
+    ``f`` keeps attempt 0's Newton loop HLO identical to the fault-free
+    step at every clean index: a wrapped ``f`` inserts a select into the
+    loop body, which perturbs XLA fusion under vmap and costs bitwise
+    equality at sub-ulp level.  A failed attempt (not converged, or
+    non-finite state) falls through a ``lax.cond`` chain: ``max_retries``
+    clean retries at escalated Newton caps — bit-identical to the
+    fault-free step whenever they converge, because the Newton while_loop
+    exits dynamically on residual <= tol — then optionally two clean h/2
+    sub-steps as a non-bitwise last resort.  Returns
+    ``(u_next, StepInfo, rescued)`` with ``rescued`` an int32 flag: the
+    accepted result came from a retry/halving branch.
+    """
+    rescue = cfg.rescue if cfg.rescue is not None else \
+        RescueConfig(max_retries=0, escalate=1, dt_halving=False)
+    fault = cfg.fault
+
+    # attempt-0 fault gates (Python False when the plan has none)
+    bad_nan = bad_inf = forced = False
+    if fault is not None:
+        bad_nan = fault.traced_gate("newton", "nan", idx)
+        bad_inf = fault.traced_gate("newton", "inf", idx)
+        forced = fault.traced_gate("newton", "diverge", idx)
+
+    def poison(x):
+        if bad_nan is not False:
+            x = jnp.where(bad_nan, jnp.full_like(x, jnp.nan), x)
+        if bad_inf is not False:
+            x = jnp.where(bad_inf, jnp.full_like(x, jnp.inf), x)
+        return x
+
+    def attempt(iters, uu, tt, hh):
+        return implicit_step(f, uu, theta_p, tt, hh, cfg.theta, int(iters),
+                             cfg.newton_tol, cfg.gmres_iters, cfg.gmres_tol)
+
+    def halved():
+        cap = cfg.newton_iters * (rescue.escalate ** max(rescue.max_retries,
+                                                         1))
+        u_half, ia = attempt(cap, u, t_n, h * 0.5)
+        u_full, ib = attempt(cap, u_half, t_n + h * 0.5, h * 0.5)
+        info = StepInfo(ia.iters + ib.iters,
+                        jnp.maximum(ia.residual, ib.residual),
+                        jnp.logical_and(ia.converged, ib.converged))
+        return u_full, info
+
+    makers = [lambda: attempt(cfg.newton_iters, u, t_n, h)]
+    for r in range(1, rescue.max_retries + 1):
+        cap = cfg.newton_iters * (rescue.escalate ** r)
+        makers.append(lambda cap=cap: attempt(cap, u, t_n, h))
+    if rescue.dt_halving:
+        makers.append(halved)
+
+    def chain(i):
+        u1, info = makers[i]()
+        if i == 0:
+            if bad_nan is not False or bad_inf is not False:
+                u1 = jtu.tree_map(poison, u1)
+                info = info._replace(residual=poison(info.residual))
+            if forced is not False:
+                info = info._replace(converged=jnp.logical_and(
+                    info.converged, jnp.logical_not(forced)))
+        ok = jnp.logical_and(info.converged, _tree_allfinite(u1))
+        resc = jnp.asarray(1 if i > 0 else 0, jnp.int32)
+        if i == len(makers) - 1:
+            return u1, info, jnp.where(ok, resc, jnp.int32(0))
+        return jax.lax.cond(ok,
+                            lambda _: (u1, info, resc),
+                            lambda _: chain(i + 1), None)
+
+    return chain(0)
+
+
+def _step(f, cfg: _SolverConfig, u, theta_p, t_n, h, idx=None):
+    """Returns ``(u_next, StepInfo, rescued)``.  Dormant configs (no rescue,
+    no fault plan) take the plain path with a constant-folded zero rescue
+    count — the staged HLO is identical to the pre-rescue build."""
+    if cfg.rescue is None and cfg.fault is None:
+        u_next, info = implicit_step(f, u, theta_p, t_n, h, cfg.theta,
+                                     cfg.newton_iters, cfg.newton_tol,
+                                     cfg.gmres_iters, cfg.gmres_tol)
+        return u_next, info, jnp.zeros((), jnp.int32)
+    return _rescued_step(f, cfg, u, theta_p, t_n, h,
+                         jnp.asarray(0 if idx is None else idx))
 
 
 def _adjoint_step(f, cfg: _SolverConfig, u_n, u_next, theta_p, t_n, h, lam):
@@ -322,7 +443,8 @@ def odeint_implicit(f: VectorField, u0: PyTree, theta_p: PyTree, *, dt: float,
                     newton_iters: int = 10, newton_tol: float = 1e-9,
                     gmres_iters: int = 20, gmres_tol: float = 1e-10,
                     mass=None, return_stats: bool = False,
-                    obs=None) -> PyTree:
+                    obs=None, rescue=None, fault_plan=None,
+                    resilient: bool = False) -> PyTree:
     """Fixed-step implicit theta-method solve with a discrete adjoint.
 
     ``adjoint`` selects the checkpoint policy (``pnode`` dense states /
@@ -348,6 +470,30 @@ def odeint_implicit(f: VectorField, u0: PyTree, theta_p: PyTree, *, dt: float,
     ``implicit.recompute``, and the checkpoint store records its
     traffic.  Debug-effect taps only — gradients are bitwise-identical
     to ``obs=None``, which traces nothing extra (zero overhead off).
+
+    Fault tolerance (PR 8; all three knobs default OFF and stage zero
+    extra ops when off):
+
+    ``rescue=`` a ``RescueConfig`` (or ``True`` for the defaults) turns on
+    in-step divergence rescue: a failed step (Newton cap exhausted, or a
+    non-finite state) is retried at escalated iteration caps — bitwise the
+    fault-free step when the retry converges, since the Newton while_loop
+    exits dynamically — with an optional two-half-step (non-bitwise) last
+    resort.  Rescued-step counts surface as ``stats.rescued`` and
+    ``implicit.rescue`` obs events.
+
+    ``fault_plan=`` a ``repro.ft.FaultPlan`` injects deterministic faults:
+    traced ``newton`` nan/inf/diverge gates keyed by absolute step index
+    (they re-fire identically on adjoint recomputes — required for bitwise
+    recovery), host-side spill callback drops/corruption/flakes, and tier
+    outages that degrade ``offload`` down the spill→host→device ladder
+    before the store is built.
+
+    ``resilient=True`` (scanned pnode+spill path only) checksums spilled
+    segments and, when the bwd prefetch fails verification, re-integrates
+    the segment forward from its entry state carried in the residuals —
+    reusing the recompute machinery, so recovered gradients stay bitwise
+    the fault-free ones.
     """
     n_steps = int(n_steps)
     if n_steps < 1:
@@ -356,12 +502,14 @@ def odeint_implicit(f: VectorField, u0: PyTree, theta_p: PyTree, *, dt: float,
 
     if mass is not None:
         if (adjoint != "pnode" or offload is not None
-                or mem_budget is not None):
+                or mem_budget is not None or rescue is not None
+                or fault_plan is not None or resilient):
             raise ValueError(
                 "mass-matrix solves support only the default dense path "
-                "(adjoint='pnode', no offload/mem_budget): the mass "
-                "operator is closed over statically and the solve is "
-                "forward-only (see _odeint_implicit_mass)")
+                "(adjoint='pnode', no offload/mem_budget and no "
+                "rescue/fault_plan/resilient): the mass operator is closed "
+                "over statically and the solve is forward-only (see "
+                "_odeint_implicit_mass)")
         return _odeint_implicit_mass(f, mass, float(t0), float(dt), n_steps,
                                      theta, int(newton_iters),
                                      float(newton_tol), int(gmres_iters),
@@ -414,15 +562,47 @@ def odeint_implicit(f: VectorField, u0: PyTree, theta_p: PyTree, *, dt: float,
             raise ValueError(
                 f"offload_segment must be >= 1, got {offload_segment}")
 
+    if rescue is True:
+        rescue = RescueConfig()
+    if rescue is not None and not isinstance(rescue, RescueConfig):
+        raise ValueError(f"rescue must be a RescueConfig, True, or None; "
+                         f"got {rescue!r}")
+    if resilient and not (adjoint == "pnode" and offload == "spill"):
+        raise ValueError(
+            "resilient=True (checked prefetch + recompute fallback) applies "
+            "to the scanned spill path (adjoint='pnode', offload='spill'); "
+            f"got adjoint={adjoint!r}, offload={offload!r}")
+    if fault_plan is not None and offloaded:
+        # tier outage in the plan: walk the degradation ladder BEFORE the
+        # store is built, so the solve runs on a healthy tier
+        from repro.mem.offload import effective_tier
+        eff = effective_tier(offload, fault_plan,
+                             scanned=(adjoint == "pnode"), obs=obs)
+        if eff != offload:
+            offload = eff
+            offloaded = offload in ("host", "spill")
+            if offload != "spill":
+                offload_segment = None
+            resilient = resilient and offload == "spill"
+
     cfg = _SolverConfig(theta, int(newton_iters), float(newton_tol),
-                        int(gmres_iters), float(gmres_tol))
+                        int(gmres_iters), float(gmres_tol),
+                        rescue=rescue, fault=fault_plan,
+                        resilient=bool(resilient))
     t0, dt = float(t0), float(dt)
     if obs is not None:
+        extra = {}
+        if rescue is not None:
+            extra["rescue"] = True
+        if fault_plan is not None:
+            extra["faulted"] = True
+        if resilient:
+            extra["resilient"] = True
         obs.record("implicit.solve", method=method, adjoint=adjoint,
                    n_steps=n_steps, dt=dt, t0=t0,
                    ncheck=None if ncheck is None else int(ncheck),
                    offload=offload, newton_iters=cfg.newton_iters,
-                   gmres_iters=cfg.gmres_iters, planned=from_auto)
+                   gmres_iters=cfg.gmres_iters, planned=from_auto, **extra)
 
     if adjoint in ("revolve", "revolve2"):
         ncheck = _validate_ncheck(adjoint, ncheck, n_steps)
@@ -433,7 +613,7 @@ def odeint_implicit(f: VectorField, u0: PyTree, theta_p: PyTree, *, dt: float,
             _reject_vmap_offload(u0, theta_p,
                                  f"odeint_implicit(adjoint={adjoint!r})")
         from repro.mem.offload import make_store  # deferred: import cycle
-        store = make_store(offload)
+        store = make_store(offload, fault_plan=fault_plan)
         if obs is not None:
             store.bind_obs(obs)
         impl = _imp_revolve if adjoint == "revolve" else _imp_revolve2
@@ -449,7 +629,8 @@ def odeint_implicit(f: VectorField, u0: PyTree, theta_p: PyTree, *, dt: float,
                                        make_store)
         segment = (offload_segment if offload_segment is not None
                    else default_segment(n_steps))
-        store = make_store("spill")
+        store = make_store("spill", fault_plan=fault_plan,
+                           integrity=bool(resilient))
         if obs is not None:
             store.bind_obs(obs)
         # mapped axes are only visible HERE (as BatchTracers on the args);
@@ -492,22 +673,24 @@ def _odeint_implicit_mass(f, mass, t0, dt, n_steps, theta, newton_iters,
 
 def _imp_solve(f, cfg, t0, dt, n_steps, u0, theta_p, save_states, base=0,
                obs=None, obs_kind="implicit.steps"):
+    track_rescue = cfg.rescue is not None or cfg.fault is not None
+
     def body(carry, n):
         u, stats = carry
         # t as t0 + dt*(base+n) everywhere (not (t0+dt*base) + dt*n) so a
         # recomputed segment's times — hence its states — are bitwise the
         # forward sweep's
         t_n = t0 + dt * (base + n)
-        u_next, info = _step(f, cfg, u, theta_p, t_n, dt)
+        u_next, info, resc = _step(f, cfg, u, theta_p, t_n, dt, base + n)
         ys = u if save_states else None
         if obs is not None:
-            ys = (ys, info)
-        return (u_next, _stats_merge(stats, info)), ys
+            ys = (ys, info, resc if track_rescue else None)
+        return (u_next, _stats_merge(stats, info, resc)), ys
 
     (u_final, stats), ys = jax.lax.scan(body, (u0, _stats_zero()),
                                         jnp.arange(n_steps))
     if obs is not None:
-        states, infos = ys
+        states, infos, rescs = ys
         # ONE stacked debug-effect tap at the top level of the rule: a
         # per-step tap inside the scan body would be silently dropped in
         # custom_vjp fwd rules on jax 0.4.37 (scan-in-fwd effects; see
@@ -516,6 +699,9 @@ def _imp_solve(f, cfg, t0, dt, n_steps, u0, theta_p, save_states, base=0,
         # are unchanged.
         obs.emit(obs_kind, base=jnp.asarray(base), iters=infos.iters,
                  residual=infos.residual, converged=infos.converged)
+        if track_rescue:  # separate stream: dormant event logs unchanged
+            obs.emit("implicit.rescue", base=jnp.asarray(base),
+                     rescued=rescs)
     else:
         states = ys
     return u_final, stats, states
@@ -581,8 +767,8 @@ def _imp_advance(f, cfg, u, theta_p, start_idx, m, t0, dt, stats=None,
     def body(carry, k):
         u, st = carry
         t = t0 + dt * (start_idx + k)
-        u, info = _step(f, cfg, u, theta_p, t, dt)
-        return (u, _stats_merge(st, info) if track else st), \
+        u, info, resc = _step(f, cfg, u, theta_p, t, dt, start_idx + k)
+        return (u, _stats_merge(st, info, resc) if track else st), \
             (info if obs is not None else None)
 
     (u, stats), infos = jax.lax.scan(body, (u, stats), jnp.arange(m))
@@ -737,13 +923,18 @@ def _imp_spill(f, cfg, t0, dt, n_steps, store, segment, u0, theta_p):
 def _imp_spill_fwd(f, cfg, t0, dt, n_steps, store, segment, u0, theta_p):
     n_full, rem = divmod(n_steps, segment)
     obs = store._obs
+    track_rescue = cfg.rescue is not None or cfg.fault is not None
+    # resilient mode keeps each segment's ENTRY state in the residuals
+    # (O(sqrt(N)) extra liveness) so the bwd sweep can re-integrate a
+    # segment whose spilled payload fails its integrity check
+    resilient = cfg.resilient
 
     def run_segment(u, stats, tok, base, m):
         def step(carry, i):
             u, st = carry
             t = t0 + dt * (base + i)
-            u_next, info = _step(f, cfg, u, theta_p, t, dt)
-            return (u_next, _stats_merge(st, info)), \
+            u_next, info, resc = _step(f, cfg, u, theta_p, t, dt, base + i)
+            return (u_next, _stats_merge(st, info, resc)), \
                 ((u, info) if obs is not None else u)
 
         (u, stats), ys = jax.lax.scan(step, (u, stats), jnp.arange(m))
@@ -753,16 +944,20 @@ def _imp_spill_fwd(f, cfg, t0, dt, n_steps, store, segment, u0, theta_p):
 
     u, stats, tok = u0, _stats_zero(), store.init_token()
     seg_infos = rem_infos = None
+    seg_starts = rem_start = None
     if n_full:
         def seg_body(carry, s_idx):
             u, stats, tok = carry
+            u_in = u
             u, stats, tok, infos = run_segment(u, stats, tok,
                                                s_idx * segment, segment)
-            return (u, stats, tok), infos
+            return (u, stats, tok), \
+                (infos, u_in if resilient else None)
 
-        (u, stats, tok), seg_infos = jax.lax.scan(seg_body, (u, stats, tok),
-                                                  jnp.arange(n_full))
+        (u, stats, tok), (seg_infos, seg_starts) = jax.lax.scan(
+            seg_body, (u, stats, tok), jnp.arange(n_full))
     if rem:
+        rem_start = u if resilient else None
         u, stats, tok, rem_infos = run_segment(
             u, stats, tok, jnp.asarray(n_full * segment), rem)
     if obs is not None:
@@ -778,17 +973,43 @@ def _imp_spill_fwd(f, cfg, t0, dt, n_steps, store, segment, u0, theta_p):
             obs.emit("implicit.steps", base=jnp.asarray(n_full * segment),
                      iters=rem_infos.iters, residual=rem_infos.residual,
                      converged=rem_infos.converged)
-    return (u, stats), (tok, u, theta_p)
+        if track_rescue:
+            obs.emit("implicit.rescue", base=jnp.asarray(0),
+                     rescued=stats.rescued)
+    return (u, stats), (tok, u, theta_p, seg_starts, rem_start)
 
 
 @scope("imp_spill/bwd")
 def _imp_spill_bwd(f, cfg, t0, dt, n_steps, store, segment, res, ct):
     g, _ = ct
-    tok, u_final, theta_p = res
+    tok, u_final, theta_p, seg_starts, rem_start = res
     n_full, rem = divmod(n_steps, segment)
+    obs = store._obs
+    resilient = cfg.resilient
 
-    def run_segment_bwd(lam, mu, u_next, tok, base, m):
-        tok, states = store.prefetch(tok, base, m)  # ONE callback, m slots
+    def recompute_states(u_start, base, m):
+        # identical op sequence to the forward sub-sweep (same
+        # t0 + dt*(base+i) times, same _step — injected faults and their
+        # rescues re-fire, keyed by the absolute step index), so the
+        # recovered states are bitwise the ones the lost segment held
+        def step(u, i):
+            t = t0 + dt * (base + i)
+            u_next, _info, _resc = _step(f, cfg, u, theta_p, t, dt, base + i)
+            return u_next, u
+
+        _, states = jax.lax.scan(step, u_start, jnp.arange(m))
+        return states
+
+    def run_segment_bwd(lam, mu, u_next, tok, base, m, u_start):
+        if resilient:
+            tok, ok, fetched = store.prefetch_checked(tok, base, m)
+            states = jax.lax.cond(
+                ok, lambda _: fetched,
+                lambda _: recompute_states(u_start, base, m), None)
+            if obs is not None:  # bwd-rule emits survive jit(grad)
+                obs.emit("spill.recover", base=jnp.asarray(base), ok=ok)
+        else:
+            tok, states = store.prefetch(tok, base, m)  # ONE callback
         u_nexts = jtu.tree_map(
             lambda s, un: jnp.concatenate([s[1:], un[None]], axis=0), states,
             u_next)
@@ -811,17 +1032,20 @@ def _imp_spill_bwd(f, cfg, t0, dt, n_steps, store, segment, res, ct):
     lam, mu, u_next = g, tree_zeros_like(theta_p), u_final
     if rem:  # the trailing partial segment is adjointed first
         lam, mu, u_next, tok = run_segment_bwd(
-            lam, mu, u_next, tok, jnp.asarray(n_full * segment), rem)
+            lam, mu, u_next, tok, jnp.asarray(n_full * segment), rem,
+            rem_start)
     if n_full:
-        def seg_body(carry, s_idx):
+        def seg_body(carry, inp):
+            s_idx, u_start = inp
             lam, mu, u_next, tok = carry
             lam, mu, u_next, tok = run_segment_bwd(lam, mu, u_next, tok,
-                                                   s_idx * segment, segment)
+                                                   s_idx * segment, segment,
+                                                   u_start)
             return (lam, mu, u_next, tok), None
 
         (lam, mu, u_next, tok), _ = jax.lax.scan(
-            seg_body, (lam, mu, u_next, tok), jnp.arange(n_full),
-            reverse=True)
+            seg_body, (lam, mu, u_next, tok),
+            (jnp.arange(n_full), seg_starts), reverse=True)
     return lam, mu
 
 

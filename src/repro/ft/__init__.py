@@ -1,5 +1,7 @@
+from repro.ft.inject import FaultPlan, FaultSpec, SimulatedPreemption
 from repro.ft.watchdog import (Heartbeat, StragglerDetector, TrainSupervisor,
                                elastic_remesh_plan)
 
-__all__ = ["Heartbeat", "StragglerDetector", "TrainSupervisor",
+__all__ = ["FaultPlan", "FaultSpec", "SimulatedPreemption",
+           "Heartbeat", "StragglerDetector", "TrainSupervisor",
            "elastic_remesh_plan"]

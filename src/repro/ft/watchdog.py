@@ -44,6 +44,10 @@ class Heartbeat:
         self.timeout_s = timeout_s
         self.on_stall = on_stall or (lambda age: None)
         self.poll_s = poll_s
+        # _last/_stalled are touched by the loop thread (beat) and the
+        # watchdog thread (_run) concurrently — lock both, so a beat
+        # racing the poll can't leave _stalled latched after a fresh beat
+        self._lock = threading.Lock()
         self._last = time.monotonic()
         self._stalled = False
         self._stop = threading.Event()
@@ -56,15 +60,20 @@ class Heartbeat:
         return self
 
     def beat(self) -> None:
-        self._last = time.monotonic()
-        self._stalled = False
+        with self._lock:
+            self._last = time.monotonic()
+            self._stalled = False
 
     def _run(self) -> None:
         while not self._stop.wait(self.poll_s):
-            age = time.monotonic() - self._last
-            if age > self.timeout_s and not self._stalled:
-                self._stalled = True
-                self.stall_count += 1
+            fire = False
+            with self._lock:
+                age = time.monotonic() - self._last
+                if age > self.timeout_s and not self._stalled:
+                    self._stalled = True
+                    self.stall_count += 1
+                    fire = True
+            if fire:  # callback outside the lock: it may call beat()
                 self.on_stall(age)
 
     def stop(self) -> None:
@@ -153,6 +162,13 @@ class TrainSupervisor:
         t0 = time.monotonic()
         fn()
         dt = time.monotonic() - t0
+        # re-check AFTER fn() too: a stall during the final step of a run
+        # would otherwise go unreported forever (no next step to notice)
+        if self.stall_event.is_set():
+            raise TimeoutError(
+                f"heartbeat watchdog fired during step {step_idx} "
+                f"({dt:.1f}s elapsed, timeout "
+                f"{self.heartbeat.timeout_s:.0f}s)")
         self.heartbeat.beat()
         self.step_times.append(dt)
         if self.straggler.record(dt):

@@ -27,10 +27,21 @@ def global_grad_norm(grads) -> jnp.ndarray:
 
 
 def make_train_step(cfg: ModelConfig, opt: AdamW, accum: int = 1,
-                    compress: str | None = None):
+                    compress: str | None = None, sentinel: bool = False):
     """Returns train_step(params, opt_state, batch, step) -> (params,
     opt_state, metrics).  accum > 1 scans over microbatches (gradient
     accumulation): live activation memory scales with B/accum.
+
+    ``sentinel=True`` adds the non-finite step sentinel **in-graph** (the
+    jitted step donates its params/opt_state buffers, so a host-side
+    "check then retry" is impossible — the inputs are gone by the time the
+    loss is observable): the step takes an extra traced ``poison`` bool
+    (the fault-injection hook; pass False when unused), a poisoned or
+    naturally non-finite loss/grad skips the parameter and optimizer
+    update via a select (the optimizer count does NOT advance on skipped
+    steps), and ``metrics["nonfinite"]`` reports the skip.  With a False
+    poison and finite grads the selects are exact pass-throughs — the
+    updated params are bitwise the sentinel-off ones.
 
     ``compress`` applies optim/compress.py wire compression to the grads
     before the optimizer sees them (flag-gated, default off):
@@ -57,7 +68,25 @@ def make_train_step(cfg: ModelConfig, opt: AdamW, accum: int = 1,
 
     grad_fn = jax.value_and_grad(loss_of, has_aux=True)
 
-    def train_step(params, opt_state, batch, step):
+    def finite_gate(params, opt_state, new_params, new_opt_state, loss,
+                    grads, poison):
+        """Select the committed (params, opt_state): the fresh update when
+        the step is healthy, the untouched inputs when poisoned or
+        non-finite."""
+        ok = jnp.logical_and(jnp.isfinite(loss),
+                             jnp.logical_not(poison))
+        for g in jtu.tree_leaves(grads):
+            ok = jnp.logical_and(ok, jnp.all(jnp.isfinite(g)))
+        keep = lambda new, old: jtu.tree_map(
+            lambda a, b: jnp.where(ok, a, b), new, old)
+        return keep(new_params, params), keep(new_opt_state, opt_state), ok
+
+    def _poison_tree(tree, poison):
+        return jtu.tree_map(
+            lambda x: x + jnp.where(poison, jnp.asarray(jnp.nan, x.dtype),
+                                    jnp.asarray(0, x.dtype)), tree)
+
+    def train_step(params, opt_state, batch, step, poison=False):
         if accum == 1:
             (loss, metrics), grads = grad_fn(params, batch)
         else:
@@ -83,24 +112,48 @@ def make_train_step(cfg: ModelConfig, opt: AdamW, accum: int = 1,
         if compress == "bf16":
             grads = compress_mod.bf16_decompress(
                 compress_mod.bf16_compress(grads))
-        params, opt_state, opt_metrics = opt.update(grads, opt_state, params)
+        if sentinel:
+            loss = loss + jnp.where(poison, jnp.asarray(jnp.nan, loss.dtype),
+                                    jnp.asarray(0, loss.dtype))
+            grads = _poison_tree(grads, poison)
+        new_params, new_opt_state, opt_metrics = opt.update(grads, opt_state,
+                                                            params)
         metrics = dict(metrics, loss=loss, **opt_metrics)
         if "grad_norm" not in metrics:  # AdamW already reports pre-clip norm
             metrics["grad_norm"] = global_grad_norm(grads)
-        return params, opt_state, metrics
+        if sentinel:
+            new_params, new_opt_state, ok = finite_gate(
+                params, opt_state, new_params, new_opt_state, loss, grads,
+                poison)
+            metrics["nonfinite"] = jnp.logical_not(ok).astype(jnp.int32)
+        return new_params, new_opt_state, metrics
 
     if compress != "int8":
         return train_step
 
-    def train_step_int8(params, opt_state, comp_state, batch, step):
+    def train_step_int8(params, opt_state, comp_state, batch, step,
+                        poison=False):
         (loss, metrics), grads = grad_fn(params, batch)
-        q, comp_state = compress_mod.int8_compress(grads, comp_state)
-        grads = compress_mod.int8_decompress(q)
-        params, opt_state, opt_metrics = opt.update(grads, opt_state, params)
+        if sentinel:
+            loss = loss + jnp.where(poison, jnp.asarray(jnp.nan, loss.dtype),
+                                    jnp.asarray(0, loss.dtype))
+            grads = _poison_tree(grads, poison)
+        q, new_comp_state = compress_mod.int8_compress(grads, comp_state)
+        grads_d = compress_mod.int8_decompress(q)
+        new_params, new_opt_state, opt_metrics = opt.update(grads_d,
+                                                            opt_state, params)
         metrics = dict(metrics, loss=loss, **opt_metrics)
         if "grad_norm" not in metrics:  # AdamW already reports pre-clip norm
-            metrics["grad_norm"] = global_grad_norm(grads)
-        return params, opt_state, comp_state, metrics
+            metrics["grad_norm"] = global_grad_norm(grads_d)
+        if sentinel:
+            new_params, new_opt_state, ok = finite_gate(
+                params, opt_state, new_params, new_opt_state, loss, grads,
+                poison)
+            # a skipped step must not consume its error-feedback residual
+            new_comp_state = jtu.tree_map(
+                lambda a, b: jnp.where(ok, a, b), new_comp_state, comp_state)
+            metrics["nonfinite"] = jnp.logical_not(ok).astype(jnp.int32)
+        return new_params, new_opt_state, new_comp_state, metrics
 
     return train_step_int8
 

@@ -15,6 +15,7 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import signal
 import time
 
 import jax
@@ -52,7 +53,9 @@ def train(cfg: ModelConfig, cell: ShapeCell, *, steps: int, mesh=None,
           seed: int = 0, grad_dtype: str | None = None,
           compress: str | None = None, log_fn=print,
           sink: MetricsSink | None = None,
-          predicted_peak_bytes: int | None = None) -> dict:
+          predicted_peak_bytes: int | None = None,
+          fault_plan=None, sentinel: bool = True,
+          sentinel_bad_steps: int = 3, max_rollbacks: int = 2) -> dict:
     """Returns {"losses": [...], "resumed_from": step|None, ...}.
 
     ``compress`` wires optim/compress.py gradient compression into the
@@ -63,7 +66,29 @@ def train(cfg: ModelConfig, cell: ShapeCell, *, steps: int, mesh=None,
     plus a ``train.compile`` record comparing the compiled step's measured
     peak bytes against ``predicted_peak_bytes`` (the planner's number,
     when a budget was planned); drift beyond 25% is warned through
-    ``log_fn`` and flagged in the record."""
+    ``log_fn`` and flagged in the record.
+
+    Fault tolerance (PR 8).  ``sentinel=True`` (default) builds the step
+    with the in-graph non-finite sentinel (launch/steps.py): a step whose
+    loss or grads are non-finite — injected or natural — commits nothing,
+    and the loop *retries* it (the data pipeline is keyed by step, so the
+    retry sees the identical batch; since nothing was committed, a clean
+    retry reproduces the fault-free loss bitwise).  After
+    ``sentinel_bad_steps`` consecutive bad attempts the loop rolls back to
+    the last committed checkpoint and replays (deterministic pipeline =>
+    exact replay); after ``max_rollbacks`` rollbacks — or with no
+    checkpoint to roll back to — it raises ``FloatingPointError`` instead
+    of looping forever on a genuinely divergent run.  SIGTERM requests a
+    clean shutdown: the loop finishes the in-flight step, writes a final
+    checkpoint, and drains pending ``CheckpointManager`` commits before
+    returning (``result["preempted"]`` is True).  ``fault_plan=`` (a
+    ``repro.ft.FaultPlan``) drives the chaos harness: site
+    ``"train.step"`` kinds ``nan`` (poison that attempt in-graph) and
+    ``preempt`` (request shutdown after that step, exercising the same
+    drain path as a real SIGTERM).  The loss history is keyed by step, so
+    retries and rollback-replays overwrite rather than duplicate:
+    ``result["losses"][i]`` is the committed loss of step ``start+i``,
+    directly comparable to a fault-free run."""
     mesh = mesh or make_host_mesh()
     slog = StructuredLogger(log_fn=log_fn, sink=sink)
     opt = AdamW(lr=lr, total_steps=max(steps, 2), warmup_steps=min(100, steps // 10 + 1),
@@ -101,13 +126,14 @@ def train(cfg: ModelConfig, cell: ShapeCell, *, steps: int, mesh=None,
             return tree
 
         mgr = None
+        shardings = {"params": pshard, "opt_state": oshard}
+        if int8:
+            shardings["comp_state"] = pshard
         if ckpt_dir:
-            mgr = CheckpointManager(ckpt_dir, keep_n=3)
+            mgr = CheckpointManager(ckpt_dir, keep_n=3,
+                                    fault_plan=fault_plan)
             latest = mgr.latest_step()
             if latest is not None:
-                shardings = {"params": pshard, "opt_state": oshard}
-                if int8:
-                    shardings["comp_state"] = pshard
                 restored, start_step = mgr.restore_latest(ckpt_tree(),
                                                           shardings)
                 params, opt_state = restored["params"], restored["opt_state"]
@@ -117,20 +143,22 @@ def train(cfg: ModelConfig, cell: ShapeCell, *, steps: int, mesh=None,
                          f"[train] resumed from step {start_step}",
                          step=start_step)
 
+        extra_in = (None,) if sentinel else ()  # the traced poison flag
         if int8:
             step_fn = jax.jit(
-                make_train_step(cfg, opt, accum=accum, compress=compress),
-                in_shardings=(pshard, oshard, pshard, None, None),
+                make_train_step(cfg, opt, accum=accum, compress=compress,
+                                sentinel=sentinel),
+                in_shardings=(pshard, oshard, pshard, None, None) + extra_in,
                 out_shardings=(pshard, oshard, pshard, None),
                 donate_argnums=(0, 1, 2))
         else:
             step_fn = jax.jit(
-                make_train_step(cfg, opt, accum=accum, compress=compress),
-                in_shardings=(pshard, oshard, None, None),
+                make_train_step(cfg, opt, accum=accum, compress=compress,
+                                sentinel=sentinel),
+                in_shardings=(pshard, oshard, None, None) + extra_in,
                 out_shardings=(pshard, oshard, None),
                 donate_argnums=(0, 1))
 
-        losses = []
         measured_peak = None
         if sink is not None:
             # measure before step 0: donated buffers are gone afterwards
@@ -138,6 +166,8 @@ def train(cfg: ModelConfig, cell: ShapeCell, *, steps: int, mesh=None,
             cargs = ((params, opt_state, comp_state, first,
                       jnp.int32(start_step)) if int8 else
                      (params, opt_state, first, jnp.int32(start_step)))
+            if sentinel:
+                cargs = cargs + (False,)
             measured_peak = _compiled_peak_bytes(step_fn, *cargs)
             drift = None
             if measured_peak is not None and predicted_peak_bytes:
@@ -161,46 +191,143 @@ def train(cfg: ModelConfig, cell: ShapeCell, *, steps: int, mesh=None,
                         drift=drift)
         detector = StragglerDetector()
         stragglers: list[int] = []
-        with TrainSupervisor(
-                heartbeat_timeout_s=600.0, straggler=detector,
-                on_straggler=lambda s, dt: stragglers.append(s)) as sup:
-            for step in range(start_step, steps):
-                batch = pipe.batch(jnp.int32(step))
-                holder = {}
+        loss_by_step: dict[int, float] = {}
+        skipped = 0
+        rollbacks = 0
+        consec_bad = 0
+        preempted = False
+        stop = {"sig": False}
+        prev_handler = None
+        try:  # SIGTERM = finish the in-flight step, checkpoint, drain
+            prev_handler = signal.signal(
+                signal.SIGTERM, lambda signum, frame:
+                stop.__setitem__("sig", True))
+        except ValueError:  # not on the main thread; no handler swap
+            prev_handler = None
+        try:
+            with TrainSupervisor(
+                    heartbeat_timeout_s=600.0, straggler=detector,
+                    on_straggler=lambda s, dt: stragglers.append(s)) as sup:
+                step = start_step
+                while step < steps:
+                    if stop["sig"]:
+                        preempted = True
+                        break
+                    batch = pipe.batch(jnp.int32(step))
+                    poison = False
+                    want_preempt = False
+                    if fault_plan is not None:
+                        spec = fault_plan.tick("train.step")
+                        if spec is not None and spec.kind == "nan":
+                            poison = sentinel  # the in-graph hook
+                        elif spec is not None and spec.kind == "preempt":
+                            want_preempt = True
+                    holder = {}
 
-                def do_step():
+                    def do_step():
+                        args = ((params, opt_state, comp_state, batch,
+                                 jnp.int32(step)) if int8 else
+                                (params, opt_state, batch, jnp.int32(step)))
+                        if sentinel:
+                            args = args + (poison,)
+                        if int8:
+                            p, o, c, m = step_fn(*args)
+                            holder.update(c=c)
+                        else:
+                            p, o, m = step_fn(*args)
+                        jax.block_until_ready(m["loss"])
+                        holder.update(p=p, o=o, m=m)
+
+                    dt = sup.step(do_step, step)
+                    # the step donates its inputs: always pick up the
+                    # returned buffers (on a skipped step they carry the
+                    # old values bitwise — the in-graph select)
+                    params, opt_state = holder["p"], holder["o"]
                     if int8:
-                        p, o, c, m = step_fn(params, opt_state, comp_state,
-                                             batch, jnp.int32(step))
-                        holder.update(c=c)
-                    else:
-                        p, o, m = step_fn(params, opt_state, batch,
-                                          jnp.int32(step))
-                    jax.block_until_ready(m["loss"])
-                    holder.update(p=p, o=o, m=m)
-
-                dt = sup.step(do_step, step)
-                params, opt_state = holder["p"], holder["o"]
-                if int8:
-                    comp_state = holder["c"]
-                loss = float(holder["m"]["loss"])
-                losses.append(loss)
-                if sink is not None:
-                    gn = holder["m"].get("grad_norm")
-                    slog.metric("train.step", step=step, loss=loss,
-                                grad_norm=(None if gn is None
-                                           else float(gn)),
-                                step_ms=dt * 1e3)
-                if step % log_every == 0 or step == steps - 1:
-                    log_fn(f"[train] step {step:5d} loss {loss:.4f} "
-                           f"({dt*1e3:.0f} ms)")
-                if mgr and (step + 1) % ckpt_every == 0:
-                    mgr.save(step + 1, ckpt_tree())
+                        comp_state = holder["c"]
+                    m = holder["m"]
+                    bad = sentinel and bool(m.get("nonfinite", 0))
+                    if bad:
+                        skipped += 1
+                        consec_bad += 1
+                        slog.log("train.skip",
+                                 f"[train] step {step}: non-finite "
+                                 f"loss/grad — update skipped (streak "
+                                 f"{consec_bad})", step=step,
+                                 streak=consec_bad)
+                        if consec_bad >= sentinel_bad_steps:
+                            if mgr is None or mgr.latest_step() is None:
+                                raise FloatingPointError(
+                                    f"training produced non-finite "
+                                    f"loss/grads for {consec_bad} "
+                                    f"consecutive attempts at step {step} "
+                                    "and there is no checkpoint to roll "
+                                    "back to")
+                            if rollbacks >= max_rollbacks:
+                                raise FloatingPointError(
+                                    f"training still non-finite at step "
+                                    f"{step} after {rollbacks} rollbacks "
+                                    "— giving up (deterministic replay "
+                                    "reproduces the divergence; this is "
+                                    "not a transient)")
+                            restored, rstep = mgr.restore_latest(
+                                ckpt_tree(), shardings)
+                            params = restored["params"]
+                            opt_state = restored["opt_state"]
+                            if int8:
+                                comp_state = restored["comp_state"]
+                            rollbacks += 1
+                            consec_bad = 0
+                            for s in [s for s in loss_by_step if s >= rstep]:
+                                del loss_by_step[s]
+                            slog.log("train.rollback",
+                                     f"[train] rolled back to step {rstep} "
+                                     f"after {sentinel_bad_steps} "
+                                     f"consecutive bad steps",
+                                     step=rstep, rollbacks=rollbacks)
+                            step = rstep
+                        # else: retry the same step — nothing was
+                        # committed, and the pipeline is keyed by step, so
+                        # a clean retry reproduces the fault-free loss
+                        # bitwise
+                        continue
+                    consec_bad = 0
+                    loss = float(m["loss"])
+                    loss_by_step[step] = loss
+                    if sink is not None:
+                        gn = m.get("grad_norm")
+                        slog.metric("train.step", step=step, loss=loss,
+                                    grad_norm=(None if gn is None
+                                               else float(gn)),
+                                    step_ms=dt * 1e3)
+                    if step % log_every == 0 or step == steps - 1:
+                        log_fn(f"[train] step {step:5d} loss {loss:.4f} "
+                               f"({dt*1e3:.0f} ms)")
+                    if mgr and (step + 1) % ckpt_every == 0:
+                        mgr.save(step + 1, ckpt_tree())
+                    step += 1
+                    if want_preempt:
+                        fault_plan.note("train.preempt", step)
+                        preempted = True
+                        break
+        finally:
+            if prev_handler is not None:
+                try:
+                    signal.signal(signal.SIGTERM, prev_handler)
+                except ValueError:
+                    pass
         if mgr:
-            mgr.save(steps, ckpt_tree())
+            # `step` is the committed progress (next step to run): the
+            # final checkpoint lands there whether the loop completed or a
+            # preemption broke out early, and wait() drains every pending
+            # async commit before we return
+            mgr.save(step, ckpt_tree())
             mgr.wait()
+        losses = [loss_by_step[s] for s in sorted(loss_by_step)]
     return {"losses": losses, "resumed_from": start_step or None,
-            "stragglers": stragglers, "params": params}
+            "stragglers": stragglers, "params": params,
+            "skipped_steps": skipped, "rollbacks": rollbacks,
+            "preempted": preempted}
 
 
 def parse_bytes(spec: str) -> int:
@@ -237,6 +364,16 @@ def main():
     ap.add_argument("--metrics", default=None, metavar="PATH",
                     help="write per-step metrics as JSONL to PATH "
                          "(repro.obs.MetricsSink)")
+    ap.add_argument("--no-sentinel", action="store_true",
+                    help="disable the in-graph non-finite loss/grad "
+                         "sentinel (skip-and-retry of poisoned steps)")
+    ap.add_argument("--sentinel-bad-steps", type=int, default=3,
+                    metavar="K",
+                    help="roll back to the last committed checkpoint "
+                         "after K consecutive non-finite steps (default 3)")
+    ap.add_argument("--max-rollbacks", type=int, default=2,
+                    help="give up (FloatingPointError) after this many "
+                         "rollbacks (default 2)")
     args = ap.parse_args()
 
     full = get_arch(args.arch)
@@ -271,7 +408,10 @@ def main():
                 ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
                 accum=args.accum, lr=args.lr, grad_dtype=args.grad_dtype,
                 compress=None if args.compress == "none" else args.compress,
-                sink=sink, predicted_peak_bytes=predicted)
+                sink=sink, predicted_peak_bytes=predicted,
+                sentinel=not args.no_sentinel,
+                sentinel_bad_steps=args.sentinel_bad_steps,
+                max_rollbacks=args.max_rollbacks)
     slog.log("train.done",
              f"[train] done in {time.time()-t0:.1f}s; "
              f"final loss {out['losses'][-1]:.4f}",

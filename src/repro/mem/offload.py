@@ -96,12 +96,37 @@ block with batch axes leading, so element b's checkpoints occupy index b
 of the block — the per-batch-element key scheme the vmapped implicit
 ensembles rely on (``core.implicit``).  Stores are per-``odeint``-call
 objects, so concurrent solves never share keys.
+
+Resilience (PR 8; all dormant-by-default, the plain paths above are
+byte-identical when unused):
+
+  * ``integrity=True`` records a crc32 over every slot's CLEAN payload at
+    write time; ``prefetch_checked`` re-verifies on read and returns an
+    ``ok`` flag alongside the data (False on a missing slot, a checksum
+    mismatch, or exhausted read retries), so callers with recompute
+    freedom — the scanned implicit adjoint — can ``lax.cond`` into
+    re-integrating the segment from its boundary state instead of
+    consuming garbage.  Corruption is modeled *at rest*: an injected
+    ``spill.write``/``corrupt`` fault flips stored bytes after
+    checksumming, which is exactly what the read-side verify catches.
+  * reads retry with exponential backoff (host-side ``time.sleep``; never
+    in traced code) up to ``max_retries`` times when a ``FaultPlan``
+    flakes the attempt — transient faults cost ``retry_cb`` ticks and
+    succeed; persistent ones surface as ``ok=False`` (checked) or a
+    ``RuntimeError`` (unchecked paths have no recompute fallback).
+  * ``effective_tier(tier, fault_plan)`` walks the degradation ladder
+    spill -> host -> device past tiers the plan marks down
+    (``FaultSpec("tier.spill", 0, "down")``), recording ``store.degrade``
+    obs events; scanned sweeps skip the slot-addressed host tier and
+    degrade spill straight to device.
 """
 from __future__ import annotations
 
 import itertools
 import threading
+import time
 import weakref
+import zlib
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -183,9 +208,12 @@ def _chunk_slots(seg: int, per_slot_bytes: int) -> int:
 
 #: counter keys every SpillStore tracks (per store and in the aggregate):
 #: ``*_cb`` counts host round-trips, ``*_slots`` checkpoint slots moved
-#: (slots/cb = achieved batching factor), ``*_bytes`` payload traffic.
+#: (slots/cb = achieved batching factor), ``*_bytes`` payload traffic;
+#: ``retry_cb`` counts read attempts repeated after an injected flake and
+#: ``integrity_fail`` slots that failed their checksum/presence check.
 _STAT_KEYS = ("write_cb", "read_cb", "free_cb",
-              "write_slots", "read_slots", "write_bytes", "read_bytes")
+              "write_slots", "read_slots", "write_bytes", "read_bytes",
+              "retry_cb", "integrity_fail")
 
 #: guards ALL counter mutation and the reset: callbacks execute on XLA's
 #: thread pool, concurrently with each other (chunked/vmapped programs)
@@ -263,14 +291,64 @@ def host_memory_kind() -> Optional[str]:
     return None
 
 
-def make_store(tier: Optional[str]) -> "CheckpointStore":
+#: degradation ladder: where a tier falls when a fault plan marks it down
+_LADDER = {"spill": "host", "host": "device"}
+
+
+def _crc_leaves(arrs) -> int:
+    """One crc32 over the concatenated bytes of a slot's leaves."""
+    c = 0
+    for a in arrs:
+        c = zlib.crc32(np.ascontiguousarray(a).tobytes(), c)
+    return c
+
+
+def effective_tier(tier: Optional[str], fault_plan=None, *,
+                   scanned: bool = False, obs=None) -> Optional[str]:
+    """Walk the degradation ladder (spill -> host -> device) past tiers a
+    ``FaultPlan`` marks unavailable (``FaultSpec("tier.<t>", 0, "down")``).
+    Returns the first available tier; each hop is recorded as a
+    ``store.degrade`` obs event when a recorder is given.  ``scanned=True``
+    says the caller is a scanned segment-batched sweep, which cannot use
+    the slot-addressed host tier — spill then degrades straight to
+    device."""
+    if fault_plan is None or tier in (None, "device"):
+        return tier
+    cur = tier
+    while cur not in (None, "device") and fault_plan.tier_disabled(cur):
+        nxt = "device" if (scanned and cur == "spill") else _LADDER[cur]
+        if obs is not None:
+            obs.record("store.degrade", requested=tier, from_tier=cur,
+                       to_tier=nxt, scanned=bool(scanned))
+        cur = nxt
+    return cur
+
+
+def make_store(tier: Optional[str], *, fault_plan=None,
+               integrity: bool = False, max_retries: int = 3,
+               retry_backoff_s: float = 1e-3) -> "CheckpointStore":
+    """Build a store for ``tier``.  The resilience knobs apply to the
+    spill tier only (the others have no host round-trips to protect):
+    ``fault_plan`` arms the injection hooks inside the callbacks,
+    ``integrity`` turns on per-slot crc32 checksums (required by
+    ``prefetch_checked``), ``max_retries``/``retry_backoff_s`` bound the
+    read retry loop.  ``store.requested_tier`` always records what the
+    caller asked for, even after a ladder degrade upstream."""
     if tier in (None, "device"):
-        return DeviceStore()
-    if tier == "host":
-        return HostStore()
-    if tier == "spill":
-        return SpillStore()
-    raise ValueError(f"unknown offload tier {tier!r}; one of {TIERS}")
+        st: CheckpointStore = DeviceStore()
+    elif tier == "host":
+        st = HostStore()
+    elif tier == "spill":
+        sp = SpillStore()
+        sp.fault_plan = fault_plan
+        sp.integrity = bool(integrity)
+        sp.max_retries = int(max_retries)
+        sp.retry_backoff_s = float(retry_backoff_s)
+        st = sp
+    else:
+        raise ValueError(f"unknown offload tier {tier!r}; one of {TIERS}")
+    st.requested_tier = tier
+    return st
 
 
 class CheckpointStore:
@@ -291,6 +369,7 @@ class CheckpointStore:
         self._vals: Dict[int, PyTree] = {}
         self._order: List[int] = []
         self.effective_tier = self.tier
+        self.requested_tier = self.tier
         self.store_id = f"{self.tier}-{next(_STORE_IDS)}"
         self._obs = None
 
@@ -422,6 +501,71 @@ class SpillStore(CheckpointStore):
         #: invisible by the time write_batch/prefetch are traced; see
         #: ``batch_scale``).
         self.payload_scale = 1
+        #: resilience knobs (see ``make_store``); all dormant by default —
+        #: with fault_plan=None and integrity=False the callbacks execute
+        #: the exact pre-PR-8 byte sequence
+        self.fault_plan = None
+        self.integrity = False
+        self.max_retries = 3
+        self.retry_backoff_s = 1e-3
+        #: per-slot crc32 over the CLEAN payload, recorded at write time
+        #: when ``integrity`` is on (host-side dict like ``_host``)
+        self._sums: Dict[int, int] = {}
+
+    # -- resilience helpers (host-side, called from the callbacks) -----------
+    def _tally_counter(self, key: str, n: int = 1) -> None:
+        with _STATS_LOCK:
+            self.stats[key] += n
+            _AGG[key] += n
+
+    def _apply_write_fault(self, spec, slot: int, arrs):
+        """Apply a ticked ``spill.write`` fault to one slot's payload:
+        ``drop`` loses it in transit (returns None, nothing stored),
+        ``corrupt`` returns deterministically flipped bytes.  Checksums
+        are recorded over the clean payload BEFORE this runs — the
+        corruption-at-rest model the read-side verify detects."""
+        if spec is None:
+            return arrs
+        if spec.kind == "drop":
+            self._host.pop(slot, None)
+            return None
+        if spec.kind == "corrupt":
+            return self.fault_plan.corrupt_arrays(arrs, salt=slot)
+        return arrs
+
+    def _read_attempt_ok(self, base: int) -> bool:
+        """One logical read, retried with exponential backoff while the
+        fault plan flakes it.  Every attempt ticks ``spill.read`` (so a
+        spec's ``count`` window spans retries: transient faults are
+        escaped by retrying, persistent ones exhaust the budget).
+        Returns False only when ``max_retries`` retries all flaked."""
+        if self.fault_plan is None:
+            return True
+        for attempt in range(self.max_retries + 1):
+            spec = self.fault_plan.tick("spill.read")
+            if spec is None or spec.kind != "flake":
+                return True
+            if attempt == self.max_retries:
+                return False
+            self._tally_counter("retry_cb")
+            if self._obs is not None:
+                self._obs.record("spill.retry", _runtime=True,
+                                 store=self.store_id, base=base,
+                                 attempt=attempt + 1)
+            time.sleep(self.retry_backoff_s * (2 ** attempt))
+        return False
+
+    def _slot_intact(self, slot: int) -> bool:
+        """Present and (when integrity is on) matching its write-time
+        checksum.  A slot written before integrity was enabled has no
+        recorded sum and passes (nothing to verify against)."""
+        leaves = self._host.get(slot)
+        if leaves is None:
+            return False
+        if not self.integrity:
+            return True
+        want = self._sums.get(slot)
+        return want is None or _crc_leaves(leaves) == want
 
     # -- counting + obs (host-side, called from the callbacks) --------------
     def _tally(self, direction: str, *, slots: int, nbytes: int, base):
@@ -446,19 +590,32 @@ class SpillStore(CheckpointStore):
     # -- host-side callbacks (never traced) ---------------------------------
     def _cb_write(self, token, slot, *leaves):
         with host_annotation("spill/write"):
+            spec = (self.fault_plan.tick("spill.write")
+                    if self.fault_plan is not None else None)
             arrs = [np.asarray(x).copy() for x in leaves]
-            self._host[int(slot)] = arrs
+            if self.integrity:
+                self._sums[int(slot)] = _crc_leaves(arrs)
+            arrs = self._apply_write_fault(spec, int(slot), arrs)
+            if arrs is not None:
+                self._host[int(slot)] = arrs
             self._tally("write", slots=1,
-                        nbytes=sum(a.nbytes for a in arrs), base=int(slot))
+                        nbytes=sum(np.asarray(x).nbytes for x in leaves),
+                        base=int(slot))
         return np.float32(0)
 
     def _cb_write_if(self, token, slot, keep, *leaves):
         with host_annotation("spill/write"):
+            spec = (self.fault_plan.tick("spill.write")
+                    if self.fault_plan is not None else None)
             if bool(keep):
                 arrs = [np.asarray(x).copy() for x in leaves]
-                self._host[int(slot)] = arrs
+                if self.integrity:
+                    self._sums[int(slot)] = _crc_leaves(arrs)
+                arrs = self._apply_write_fault(spec, int(slot), arrs)
+                if arrs is not None:
+                    self._host[int(slot)] = arrs
                 self._tally("write", slots=1,
-                            nbytes=sum(a.nbytes for a in arrs),
+                            nbytes=sum(np.asarray(x).nbytes for x in leaves),
                             base=int(slot))
             else:  # masked out: the round-trip still happened
                 self._tally("write", slots=0, nbytes=0, base=int(slot))
@@ -467,12 +624,24 @@ class SpillStore(CheckpointStore):
     def _cb_read(self):
         def read(token, slot):
             with host_annotation("spill/read"):
+                if not self._read_attempt_ok(int(slot)):
+                    # the slot-addressed schedule has no recompute
+                    # fallback; a persistent read failure is fatal here
+                    raise RuntimeError(
+                        f"spill store: read of slot {int(slot)} still "
+                        f"failing after {self.max_retries} retries")
                 leaves = self._host.get(int(slot))
                 if leaves is None:
                     # a schedule bug or a reordered free — fail loudly
                     # rather than silently contributing zero gradients
                     raise KeyError(f"spill store: slot {int(slot)} read "
                                    "before it was written (or after free)")
+                if not self._slot_intact(int(slot)):
+                    self._tally_counter("integrity_fail")
+                    raise RuntimeError(
+                        f"spill store: slot {int(slot)} failed its "
+                        "integrity check (checksum mismatch) and the "
+                        "slot-addressed path has no recompute fallback")
                 arrs = tuple(np.asarray(x) for x in leaves)
                 self._tally("read", slots=1,
                             nbytes=sum(a.nbytes for a in arrs),
@@ -499,18 +668,25 @@ class SpillStore(CheckpointStore):
         checkpoints live at index b of its slot's block (the
         per-batch-element key scheme)."""
         with host_annotation("spill/write_batch"):
+            spec = (self.fault_plan.tick("spill.write")
+                    if self.fault_plan is not None else None)
             bnd = np.ndim(token)
             seg = int(np.shape(stacked[0])[bnd])
             base = int(np.ravel(base)[0])  # broadcast copies are identical
             arrs = [np.asarray(x) for x in stacked]
             sl = (slice(None),) * bnd
             for i in range(seg):
-                self._host[base + i] = [a[sl + (i,)].copy() for a in arrs]
+                slot_arrs = [a[sl + (i,)].copy() for a in arrs]
+                if self.integrity:
+                    self._sums[base + i] = _crc_leaves(slot_arrs)
+                slot_arrs = self._apply_write_fault(spec, base + i, slot_arrs)
+                if slot_arrs is not None:
+                    self._host[base + i] = slot_arrs
             self._tally("write", slots=seg,
                         nbytes=sum(a.nbytes for a in arrs), base=base)
         return np.zeros(np.shape(token), np.float32)
 
-    def _cb_prefetch(self, seg):
+    def _cb_prefetch(self, seg, checked=False):
         def fetch(token, base):
             with host_annotation("spill/prefetch"):
                 _, sds = self._meta["idx"]
@@ -518,18 +694,40 @@ class SpillStore(CheckpointStore):
                 bnd = len(bshape)
                 base = int(np.ravel(base)[0])
                 sl = (slice(None),) * bnd
+                ok = True
+                if not self._read_attempt_ok(base):
+                    if not checked:
+                        raise RuntimeError(
+                            f"spill store: prefetch at base {base} still "
+                            f"failing after {self.max_retries} retries and "
+                            "this path has no recompute fallback")
+                    ok = False  # checked caller recomputes the segment
                 out = []
                 for k, s in enumerate(sds):
                     stack = np.zeros(bshape + (seg,) + tuple(s.shape),
                                      s.dtype)
-                    for i in range(seg):
-                        leaves = self._host.get(base + i)
-                        if leaves is not None:  # missing slots -> zeros
-                            stack[sl + (i,)] = leaves[k]
+                    if ok:
+                        for i in range(seg):
+                            leaves = self._host.get(base + i)
+                            if leaves is not None:  # missing slots -> zeros
+                                stack[sl + (i,)] = leaves[k]
                     out.append(stack)
+                if checked and ok:
+                    for i in range(seg):
+                        if not self._slot_intact(base + i):
+                            ok = False
+                            self._tally_counter("integrity_fail")
+                            if self._obs is not None:
+                                self._obs.record(
+                                    "spill.integrity", _runtime=True,
+                                    store=self.store_id, slot=base + i,
+                                    base=base)
                 self._tally("read", slots=seg,
                             nbytes=sum(a.nbytes for a in out), base=base)
-                return (np.zeros(bshape, np.float32),) + tuple(out)
+                res = (np.zeros(bshape, np.float32),)
+                if checked:
+                    res = res + (np.full(bshape, ok, bool),)
+                return res + tuple(out)
         return fetch
 
     # -- metadata ------------------------------------------------------------
@@ -635,3 +833,37 @@ class SpillStore(CheckpointStore):
         else:
             stacked = [jnp.concatenate(ps, axis=0) for ps in zip(*pieces)]
         return tok, jtu.tree_unflatten(treedef, stacked)
+
+    def prefetch_checked(self, token, base, seg: int):
+        """``prefetch`` plus an integrity verdict: returns ``(token, ok,
+        tree)`` where ``ok`` (a traced bool) is True only if every slot in
+        ``[base, base+seg)`` was present, passed its crc32 (recorded at
+        write time; requires the store built with ``integrity=True``), and
+        the host read did not exhaust its retry budget.  On ``ok=False``
+        the returned tree is whatever could be read (zeros on total
+        failure) — callers must ``lax.cond`` on ``ok`` into a recompute
+        fallback rather than consume it.  Chunked exactly like
+        ``prefetch``; the chunk verdicts AND together."""
+        treedef, sds = self._meta["idx"]
+        per_slot = max((int(np.prod(s.shape, dtype=np.int64))
+                        * np.dtype(s.dtype).itemsize)
+                       for s in sds) * self.payload_scale if sds else 0
+        m = _chunk_slots(seg, per_slot)
+        ok_sds = jax.ShapeDtypeStruct((), jnp.bool_)
+        tok, ok, pieces = token, None, []
+        for o in range(0, seg, m):
+            mm = min(m, seg - o)
+            out_sds = (_TOKEN_SDS, ok_sds) + tuple(
+                jax.ShapeDtypeStruct((mm,) + tuple(s.shape), s.dtype)
+                for s in sds)
+            out = jax.pure_callback(self._cb_prefetch(mm, checked=True),
+                                    out_sds, tok, base + o,
+                                    vmap_method="broadcast_all")
+            tok = out[0]
+            ok = out[1] if ok is None else jnp.logical_and(ok, out[1])
+            pieces.append(out[2:])
+        if len(pieces) == 1:
+            stacked = pieces[0]
+        else:
+            stacked = [jnp.concatenate(ps, axis=0) for ps in zip(*pieces)]
+        return tok, ok, jtu.tree_unflatten(treedef, stacked)
