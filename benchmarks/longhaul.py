@@ -1,0 +1,269 @@
+"""Long-horizon trajectory benchmark (BENCH_6): the multi-tier (RAM/disk)
+checkpoint stack at ROADMAP-scale step counts — the run the pre-PR-9
+O(N) callback paths made infeasible.
+
+  fixed      an N_t >= 10^6 (full mode) fixed-step rk4 trajectory
+             gradient under a RAM budget the host-only tier CANNOT
+             satisfy: the checkpoint slots split ``snaps_in_ram``/disk
+             (dolfin-adjoint multistage), forward+reverse data callbacks
+             stay O(N_t/segment) — gated EXACTLY against the recorded
+             baseline — and the store's RAM-resident peak stays under
+             the budget while the disk tier absorbs the overflow.
+  adaptive   an adaptive dopri5 trajectory (>= 10^5 accepted steps in
+             full mode) through the segment-flushed staging ring:
+             forward write callbacks <= ceil(n_attempted/segment)+1.
+             The pre-PR-9 sweep paid one host callback per ATTEMPTED
+             step (`write_at` inside the while_loop body).
+  bitwise    disk-tier and split-tier gradients bitwise-identical to the
+             device oracle on a small control problem — the tier
+             contract the big runs rely on, checked where a device
+             oracle is still affordable.
+
+``main(check=True)`` (CI bench-smoke) gates the record against
+``benchmarks/bench6_baseline.json`` via the unified ``repro.obs.baseline``
+checker: exact callbacks-per-grad, RAM-peak-vs-budget, host-only
+infeasibility, the adaptive forward bound, and the bitwise contracts.
+"""
+from __future__ import annotations
+
+import json
+import math
+import resource
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.adaptive import odeint_adaptive
+from repro.core.adjoint import odeint
+from repro.mem.model import slot_bytes
+from repro.mem.offload import reset_spill_stats, spill_stats
+from repro.obs import (DEFAULT_REGISTRY, BaselineRef, Gate,
+                       check_against_baseline as _obs_check)
+
+BASELINE_PATH = Path(__file__).resolve().parent / "bench6_baseline.json"
+
+D = 4  # small state: the point is trajectory LENGTH, not width
+
+
+def _f(u, th, t):
+    # cheap, parameter-coupled, with a fast forcing term: one rk4 step is
+    # a handful of flops so 10^6 of them is an I/O-bound problem (the
+    # regime under test), and the sin(20t) forcing keeps the adaptive
+    # controller's step size small enough to accumulate real step counts
+    return jnp.tanh(u * th) - 0.1 * u + jnp.sin(20.0 * t)
+
+
+def _problem():
+    u0 = jnp.linspace(-0.5, 0.5, D)
+    th = jnp.linspace(0.8, 1.2, D)
+    return u0, th
+
+
+def _rss_bytes() -> int:
+    # ru_maxrss is KiB on Linux
+    return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss * 1024
+
+
+def bench_fixed(n_steps: int, segment: int, snaps_in_ram: int) -> dict:
+    """The headline run: fixed-step gradient with the checkpoint set split
+    across RAM and disk under a budget host-only storage cannot meet."""
+    u0, th = _problem()
+    sb = slot_bytes("rk4", D * u0.dtype.itemsize)
+    ram_budget = snaps_in_ram * sb
+    host_only_bytes = n_steps * sb
+
+    def loss(th_):
+        uf = odeint(_f, u0, th_, dt=1e-3, n_steps=n_steps, method="rk4",
+                    adjoint="pnode", offload="spill",
+                    offload_segment=segment, snaps_in_ram=snaps_in_ram)
+        return jnp.sum(uf ** 2)
+
+    gfn = jax.jit(jax.grad(loss))
+    jax.block_until_ready(gfn(th))  # compile
+    reset_spill_stats()
+    t0 = time.perf_counter()
+    g = gfn(th)
+    jax.block_until_ready(g)
+    wall = time.perf_counter() - t0
+    st = spill_stats()
+    n_segments = math.ceil(n_steps / segment)
+
+    rec = {
+        "n_steps": n_steps, "segment": segment, "n_segments": n_segments,
+        "snaps_in_ram": snaps_in_ram,
+        "slot_bytes": sb,
+        "ram_budget_bytes": ram_budget,
+        "host_only_ckpt_bytes": host_only_bytes,
+        "host_only_exceeds_ram_budget": host_only_bytes > ram_budget,
+        "callbacks_per_grad": st["write_cb"] + st["read_cb"],
+        "callbacks_per_step_api": 2 * n_steps,  # the pre-PR cost
+        "write_cb": st["write_cb"], "read_cb": st["read_cb"],
+        "dispatch_cb": st["dispatch_cb"],
+        "prefetch_hit_cb": st["prefetch_hit_cb"],
+        "ram_bytes_peak": st["ram_bytes_peak"],
+        "ram_peak_under_budget": st["ram_bytes_peak"] <= ram_budget,
+        "disk_write_bytes": st["disk_write_bytes"],
+        "disk_read_bytes": st["disk_read_bytes"],
+        "process_rss_bytes": _rss_bytes(),
+        "grad_finite": bool(jnp.all(jnp.isfinite(g))),
+        "wall_s": wall,
+    }
+    print(f"fixed: N_t={n_steps} grad in {wall:.1f}s; "
+          f"{rec['callbacks_per_grad']} data callbacks "
+          f"(pre-PR per-step API: {rec['callbacks_per_step_api']}); "
+          f"store RAM peak {st['ram_bytes_peak']} B <= budget "
+          f"{ram_budget} B: {rec['ram_peak_under_budget']} "
+          f"(host-only would need {host_only_bytes} B); "
+          f"disk absorbed {st['disk_write_bytes']} B")
+    return rec
+
+
+def bench_adaptive(max_steps: int, segment: int, t1: float) -> dict:
+    """The staging-ring run: forward callbacks bounded by segments of
+    ACCEPTED steps, not one per attempted step."""
+    u0, th = _problem()
+
+    def loss(th_):
+        uf, info = odeint_adaptive(_f, u0, th_, t0=0.0, t1=t1,
+                                   rtol=1e-6, atol=1e-6,
+                                   max_steps=max_steps,
+                                   offload="spill",
+                                   offload_segment=segment)
+        return jnp.sum(uf ** 2), info
+
+    gfn = jax.jit(jax.value_and_grad(loss, has_aux=True))
+    jax.block_until_ready(gfn(th))  # compile
+    reset_spill_stats()
+    t0 = time.perf_counter()
+    (_, info), g = gfn(th)
+    jax.block_until_ready(g)
+    wall = time.perf_counter() - t0
+    st = spill_stats()
+    n_acc = int(info.n_accepted)
+    n_att = n_acc + int(info.n_rejected)
+    bound = math.ceil(n_att / segment) + 1
+
+    rec = {
+        "max_steps": max_steps, "segment": segment,
+        "n_accepted": n_acc, "n_attempted": n_att,
+        "forward_write_cb": st["write_cb"],
+        "forward_cb_bound": bound,
+        "forward_cb_within_bound": st["write_cb"] <= bound,
+        "forward_cb_per_attempt_api": n_att,  # the pre-PR cost
+        "read_cb": st["read_cb"],
+        "dispatch_cb": st["dispatch_cb"],
+        "prefetch_hit_cb": st["prefetch_hit_cb"],
+        "grad_finite": bool(jnp.all(jnp.isfinite(g))),
+        "wall_s": wall,
+    }
+    print(f"adaptive: {n_acc} accepted / {n_att} attempted in {wall:.1f}s; "
+          f"forward writes {st['write_cb']} <= ceil(n_att/seg)+1={bound} "
+          f"(pre-PR staging: {n_att} callbacks); reverse reads "
+          f"{st['read_cb']}, async hits {st['prefetch_hit_cb']}")
+    return rec
+
+
+def bench_bitwise(n_steps: int = 48) -> dict:
+    """Tier contract on a control problem small enough for a device
+    oracle: disk and RAM/disk-split gradients must be bit-identical."""
+    u0, th = _problem()
+
+    def grad(adjoint="pnode", **kw):
+        def loss(th_):
+            uf = odeint(_f, u0, th_, dt=0.01, n_steps=n_steps,
+                        method="rk4", adjoint=adjoint,
+                        ncheck=6 if adjoint != "pnode" else None, **kw)
+            return jnp.sum(uf ** 2)
+
+        return jax.jit(jax.grad(loss))(th)
+
+    g_dev = grad()
+    out = {}
+    for name, kw in (("spill", dict(offload="spill")),
+                     ("disk", dict(offload="disk")),
+                     ("split", dict(offload="spill", snaps_in_ram=3,
+                                    offload_segment=2))):
+        out[name] = bool(jnp.all(grad(**kw) == g_dev))
+    # host is slot-addressed (revolve only): disk must match it bitwise
+    g_host = grad(adjoint="revolve", offload="host")
+    g_rdisk = grad(adjoint="revolve", offload="disk")
+    out["disk_vs_host"] = bool(jnp.all(g_rdisk == g_host))
+    print("bitwise vs device oracle: " +
+          ", ".join(f"{k}={v}" for k, v in out.items()))
+    return out
+
+
+#: BENCH_6 regression gates (unified repro.obs.baseline checker): the CI
+#: guard that the multi-tier stack stays O(N/seg) in callbacks, under its
+#: RAM budget, and bitwise across media.
+GATES = [
+    Gate("smoke_config", "fixed.n_steps", "==",
+         BaselineRef("smoke_n_steps"), precondition=True,
+         message="callback counts scale with problem size; the baseline "
+                 "is recorded for the --smoke configuration — re-run "
+                 "with --smoke to compare against it"),
+    Gate("fixed_callbacks", "fixed.callbacks_per_grad", "==",
+         BaselineRef("fixed_callbacks_per_grad"),
+         message="fixed-step data callbacks per grad changed (exact "
+                 "O(N/seg) gate)"),
+    Gate("fixed_ram_budget", "fixed.ram_peak_under_budget", "truthy",
+         message="store RAM peak exceeded the snaps_in_ram budget"),
+    Gate("fixed_host_infeasible", "fixed.host_only_exceeds_ram_budget",
+         "truthy",
+         message="the benchmark no longer exercises a budget host-only "
+                 "storage cannot satisfy"),
+    Gate("fixed_disk_used", "fixed.disk_write_bytes", ">",
+         0, message="no bytes reached the disk tier"),
+    Gate("adaptive_forward_cb", "adaptive.forward_cb_within_bound",
+         "truthy",
+         message="adaptive forward callbacks exceed ceil(n_att/seg)+1 — "
+                 "the O(N) staging path is back"),
+    Gate("bitwise_disk", "bitwise.disk", "truthy",
+         message="disk-tier grads no longer bitwise vs device"),
+    Gate("bitwise_split", "bitwise.split", "truthy",
+         message="RAM/disk-split grads no longer bitwise vs device"),
+    Gate("bitwise_disk_vs_host", "bitwise.disk_vs_host", "truthy",
+         message="revolve disk-tier grads diverged from the host tier"),
+]
+
+
+def check_against_baseline(record: dict) -> list[str]:
+    return _obs_check(record, GATES, BASELINE_PATH, bench="longhaul",
+                      registry=DEFAULT_REGISTRY)
+
+
+def main(smoke: bool = False, out_path: str = "BENCH_6.json",
+         check: bool = False) -> dict:
+    if smoke:
+        fixed_cfg = dict(n_steps=20_000, segment=200, snaps_in_ram=4_000)
+        adaptive_cfg = dict(max_steps=2_000, segment=100, t1=100.0)
+    else:
+        # ROADMAP item 4: N_t >= 10^6 fixed, >= 10^5 accepted adaptive
+        fixed_cfg = dict(n_steps=1_000_000, segment=1_000,
+                         snaps_in_ram=100_000)
+        adaptive_cfg = dict(max_steps=125_000, segment=500, t1=7_000.0)
+    print("== longhaul: fixed-step multi-tier (RAM/disk) grad ==")
+    fixed = bench_fixed(**fixed_cfg)
+    print("== longhaul: adaptive staging-ring grad ==")
+    adaptive = bench_adaptive(**adaptive_cfg)
+    print("== longhaul: tier bitwise contract ==")
+    bitwise = bench_bitwise()
+    record = {"bench": "longhaul", "smoke": smoke, "fixed": fixed,
+              "adaptive": adaptive, "bitwise": bitwise}
+    Path(out_path).write_text(json.dumps(record, indent=2))
+    print(f"[longhaul] wrote {out_path}")
+    if check:
+        errs = check_against_baseline(record)
+        for e in errs:
+            print(f"[longhaul] BASELINE REGRESSION: {e}")
+        if errs:
+            raise SystemExit(1)
+        print("[longhaul] multi-tier gates within baseline")
+    return record
+
+
+if __name__ == "__main__":
+    import sys
+    main(smoke="--smoke" in sys.argv, check="--check" in sys.argv)

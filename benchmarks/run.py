@@ -5,12 +5,14 @@
   PYTHONPATH=src python -m benchmarks.run --smoke    # CI: mem_plan +
                                                     # hotpath +
                                                     # stiff_ensemble +
-                                                    # chaos; writes
-                                                    # BENCH_2/3/4/5
+                                                    # chaos + longhaul;
+                                                    # writes
+                                                    # BENCH_2/3/4/5/6
                                                     # .json, fails on
                                                     # host-callback,
-                                                    # NFE-B, or fault-
-                                                    # recovery
+                                                    # NFE-B, fault-
+                                                    # recovery, or
+                                                    # multi-tier
                                                     # regressions
 """
 from __future__ import annotations
@@ -23,7 +25,8 @@ def main() -> None:
     full = "--full" in sys.argv
 
     if "--smoke" in sys.argv:
-        from benchmarks import chaos, hotpath, mem_plan, stiff_ensemble
+        from benchmarks import (chaos, hotpath, longhaul, mem_plan,
+                                stiff_ensemble)
         from repro.obs import DEFAULT_REGISTRY, MetricsSink
         t0 = time.time()
         # METRICS.jsonl: per-section structured records + the unified
@@ -70,6 +73,21 @@ def main() -> None:
                     "losses_equal"],
                 train_rollback_bitwise=rec5["train"]["rollback_run"][
                     "losses_equal"])
+            t4 = time.time()
+            rec6 = longhaul.main(smoke=True, check=True)
+            sink.emit(
+                "bench.section", section="longhaul",
+                elapsed_s=time.time() - t4,
+                fixed_callbacks_per_grad=rec6["fixed"][
+                    "callbacks_per_grad"],
+                fixed_ram_peak_under_budget=rec6["fixed"][
+                    "ram_peak_under_budget"],
+                fixed_disk_write_bytes=rec6["fixed"]["disk_write_bytes"],
+                adaptive_forward_cb_within_bound=rec6["adaptive"][
+                    "forward_cb_within_bound"],
+                bitwise_disk=rec6["bitwise"]["disk"],
+                bitwise_split=rec6["bitwise"]["split"],
+                bitwise_disk_vs_host=rec6["bitwise"]["disk_vs_host"])
             sink.emit("bench.gates",
                       **{k: v for k, v in
                          DEFAULT_REGISTRY.snapshot()["counters"].items()
@@ -78,8 +96,9 @@ def main() -> None:
         return
 
     from benchmarks import (adjoint_discrepancy, chaos, cnf_tables,
-                            fig3_memory, hotpath, mem_plan, roofline,
-                            stiff_ensemble, stiff_table8, table2_costs)
+                            fig3_memory, hotpath, longhaul, mem_plan,
+                            roofline, stiff_ensemble, stiff_table8,
+                            table2_costs)
 
     sections = [
         ("adjoint_discrepancy (Table 1 / Prop 1)",
@@ -94,6 +113,8 @@ def main() -> None:
         ("stiff_ensemble (vmapped implicit under budget / BENCH_4.json)",
          stiff_ensemble.main),
         ("chaos (fault injection + recovery / BENCH_5.json)", chaos.main),
+        ("longhaul (multi-tier long-horizon / BENCH_6.json)",
+         longhaul.main),
         ("roofline (EXPERIMENTS Roofline)", roofline.main),
     ]
 

@@ -21,15 +21,30 @@ these feed the Table-8 benchmark.
 
 mem — the ring buffer allocates max_steps*(N_s+1) state vectors up front
 (Table-2 pnode storage at the worst-case step count).  ``offload="spill"``
-writes accepted steps through a ``repro.mem.offload`` spill store instead:
-the device carries one token scalar, the host dict holds the checkpoints,
-and the reverse sweep prefetches them back one ``offload_segment``-sized
-chunk per host callback (``store.prefetch``; segments whose first slot is
-past ``n_accepted`` are cond-skipped, so host round-trips are
-O(n_accepted / segment), not O(max_steps)).  Device-live memory is
-O(segment) states for any max_steps, with identical gradients (rejected
-steps never reach the store, mirroring the paper's observation that they
-cost the adjoint nothing).
+(or ``"disk"`` — same callbacks, file-backed payloads) writes accepted
+steps through a ``repro.mem.offload`` store instead: the device carries
+one token scalar plus a SEGMENT-SIZED staging ring, the host side holds
+the checkpoints, and the reverse sweep prefetches them back one
+``offload_segment``-sized chunk per host callback (``store.prefetch``;
+segments whose first slot is past ``n_accepted`` are cond-skipped, so
+host round-trips are O(n_accepted / segment), not O(max_steps)).
+
+The FORWARD sweep is segment-batched too: accepted steps land in a
+device-side ring of ``offload_segment`` slots (rejected attempts
+where-mask to a no-op), and the ring is flushed with ONE ``write_batch``
+callback each time the accepted count crosses a segment boundary, plus
+one trailing flush for the partial last segment — ceil(n_accepted/seg)
+write callbacks total instead of one per *attempted* step (the last O(N)
+callback path; tests/test_hotpath.py asserts the ceil bound).  The
+trailing flush ships the full ring, so slots in [n_accepted,
+ceil(n_accepted/seg)*seg) hold stale ring entries — the reverse sweep
+cond-skips everything past ``n_accepted``, so they are never read.  The
+reverse sweep software-pipelines its reads (``prefetch_issue`` of
+segment k-1 right after segment k's data lands — see
+``repro.mem.offload``), overlapping host/disk I/O with adjoint compute.
+Device-live memory is O(segment) states for any max_steps, with
+identical gradients (rejected steps never reach the store, mirroring the
+paper's observation that they cost the adjoint nothing).
 
 ``fused_stages=True`` lowers the RK stage updates (forward) and per-stage
 adjoint recursion (reverse) through the Pallas ``fused_lincomb`` kernel
@@ -82,13 +97,20 @@ def odeint_adaptive(f: VectorField, u0: PyTree, theta: PyTree, *,
                     h0: float | None = None, method: str = "dopri5",
                     offload: str | None = None,
                     offload_segment: int | None = None,
+                    snaps_in_ram: int | None = None,
+                    offload_dir: str | None = None,
                     fused_stages: bool = False,
                     obs=None, fault_plan=None):
     """Adaptive solve from t0 to t1; differentiable (discrete adjoint over
     accepted steps).  Returns (u_final, AdaptiveInfo).  ``offload="spill"``
-    replaces the preallocated ring buffer with a host-side checkpoint store
-    whose reverse sweep prefetches ``offload_segment`` slots per host
-    callback (default ceil(sqrt(max_steps))); ``fused_stages`` selects the
+    (or ``"disk"`` for file-backed payloads) replaces the preallocated
+    ring buffer with a host-side checkpoint store: accepted steps batch
+    through a segment-sized staging ring flushed once per
+    ``offload_segment`` accepted steps (default ceil(sqrt(max_steps))),
+    and the reverse sweep prefetches them back one segment per host
+    callback; ``snaps_in_ram`` caps the spill tier's RAM-resident slots
+    (overflow sinks to disk files) and ``offload_dir`` pins the disk
+    files to a caller-owned directory.  ``fused_stages`` selects the
     Pallas stage-fusion kernels (see module docstring).
 
     ``obs=`` attaches a ``repro.obs.FlightRecorder``: every *attempted*
@@ -113,27 +135,36 @@ def odeint_adaptive(f: VectorField, u0: PyTree, theta: PyTree, *,
     (``err_norm`` NaN, ``accept`` False)."""
     if method != "dopri5":
         raise ValueError("adaptive integration currently supports dopri5")
-    if offload not in (None, "device", "spill"):
+    if offload not in (None, "device", "spill", "disk"):
         raise ValueError(
             f"unknown offload tier {offload!r} for the adaptive ring "
-            "buffer; one of (None, 'device', 'spill')")
-    if offload_segment is not None and offload != "spill":
+            "buffer; one of (None, 'device', 'spill', 'disk')")
+    if offload_segment is not None and offload not in ("spill", "disk"):
         raise ValueError(
-            "offload_segment only applies to the callback spill tier "
+            "offload_segment only applies to the callback spill/disk "
+            f"tiers; got offload={offload!r}")
+    if snaps_in_ram is not None and offload != "spill":
+        raise ValueError(
+            "snaps_in_ram is the spill tier's RAM/disk split "
             f"(offload='spill'); got offload={offload!r}")
-    if offload == "spill" and fault_plan is not None:
-        # tier outage: the scanned ring buffer degrades spill -> device
+    if offload_dir is not None and offload not in ("spill", "disk"):
+        raise ValueError(
+            "offload_dir pins the disk tier's segment files "
+            f"(offload='spill'/'disk'); got offload={offload!r}")
+    if offload in ("spill", "disk") and fault_plan is not None:
+        # tier outage: the scanned ring buffer walks spill -> disk ->
+        # device (the slot-addressed host tier is not scanned-capable)
         from repro.mem.offload import effective_tier
-        if effective_tier("spill", fault_plan, scanned=True,
-                          obs=obs) != "spill":
-            offload = None
+        eff = effective_tier(offload, fault_plan, scanned=True, obs=obs)
+        offload = None if eff in (None, "device") else eff
     store = None
     segment = 1
-    if offload == "spill":
+    if offload in ("spill", "disk"):
         from repro.core.adjoint import _reject_vmap_offload
         from repro.mem.offload import default_segment, make_store
         _reject_vmap_offload(u0, theta, "odeint_adaptive")
-        store = make_store("spill", fault_plan=fault_plan)
+        store = make_store(offload, fault_plan=fault_plan,
+                           snaps_in_ram=snaps_in_ram, disk_dir=offload_dir)
         segment = (int(offload_segment) if offload_segment is not None
                    else default_segment(int(max_steps)))
         segment = max(1, min(segment, int(max_steps)))
@@ -159,25 +190,38 @@ def odeint_adaptive(f: VectorField, u0: PyTree, theta: PyTree, *,
 def _odeint_adaptive(f, t0, t1, rtol, atol, max_steps, h0, store, segment,
                      fused, obs, fault, u0, theta):
     out, _res = _adaptive_fwd_solve(f, t0, t1, rtol, atol, max_steps, h0,
-                                    store, fused, u0, theta, obs=obs,
-                                    fault=fault)
+                                    store, segment, fused, u0, theta,
+                                    obs=obs, fault=fault)
     return out
 
 
-def _adaptive_fwd_solve(f, t0, t1, rtol, atol, max_steps, h0, store, fused,
-                        u0, theta, obs=None, fault=None):
+def _adaptive_fwd_solve(f, t0, t1, rtol, atol, max_steps, h0, store, segment,
+                        fused, u0, theta, obs=None, fault=None):
     tab = DOPRI5
     s = tab.num_stages
     order = tab.order
     spill = store is not None
+    seg = max(1, min(int(segment), int(max_steps)))
 
     def buf_like(x):
         return jnp.zeros((max_steps,) + x.shape, x.dtype)
 
+    def ring_like(x):
+        return jnp.zeros((seg,) + x.shape, x.dtype)
+
     stage0 = tree_stack([u0] * s)  # shape template for stages
     if spill:
-        # ring buffer replaced by the store: the carry holds one token
-        bufs0 = store.init_token()
+        # the carry holds the store token plus a segment-sized staging
+        # ring: accepted steps land at ring position n_acc % seg and ONE
+        # write_batch callback flushes the full ring each time the
+        # accepted count crosses a segment boundary — O(n_acc/seg)
+        # callbacks instead of one write_at per attempted step
+        fdt = jnp.result_type(float)
+        ring0 = (jtu.tree_map(ring_like, u0),
+                 jtu.tree_map(ring_like, jtu.tree_map(jnp.zeros_like,
+                                                      stage0)),
+                 jnp.zeros((seg,), fdt), jnp.zeros((seg,), fdt))
+        bufs0 = (store.init_token(), ring0)
     else:
         state_buf = jtu.tree_map(buf_like, u0)
         stage_buf = jtu.tree_map(buf_like,
@@ -241,8 +285,20 @@ def _adaptive_fwd_solve(f, t0, t1, rtol, atol, max_steps, h0, store, fused,
 
         idx = n_acc
         if spill:
-            bufs2 = store.write_at(bufs, idx, (u, tree_stack(ks), h, t),
-                                   keep=accept)
+            tok, ring = bufs
+            pos = jnp.remainder(idx, seg)
+            ring2 = jtu.tree_map(
+                lambda b, x: b.at[pos].set(jnp.where(accept, x, b[pos])),
+                ring, (u, tree_stack(ks), h, t))
+            # flush the staging ring once the accepted index fills it:
+            # one segment-batched callback per seg ACCEPTED steps;
+            # rejected attempts never reach the host
+            do_flush = jnp.logical_and(accept, pos == seg - 1)
+            tok2 = jax.lax.cond(
+                do_flush,
+                lambda t_: store.write_batch(t_, idx + 1 - seg, ring2),
+                lambda t_: t_, tok)
+            bufs2 = (tok2, ring2)
         else:
             sb, kb, hb, tb = bufs
             sb2 = jtu.tree_map(lambda b, x: b.at[idx].set(
@@ -269,6 +325,17 @@ def _adaptive_fwd_solve(f, t0, t1, rtol, atol, max_steps, h0, store, fused,
     u_f, t_f, h_f, n_acc, n_rej, bufs, _ = jax.lax.while_loop(cond, body, carry0)
     nfe = (n_acc + n_rej) * s
     info = AdaptiveInfo(n_accepted=n_acc, n_rejected=n_rej, nfe_forward=nfe)
+    if spill:
+        # trailing flush: ship the partially-filled ring (positions >=
+        # n_acc % seg are stale entries landing at slots >= n_acc, which
+        # the reverse sweep cond-skips — they are never read)
+        tok, ring = bufs
+        rem_n = jnp.remainder(n_acc, seg)
+        tok = jax.lax.cond(
+            rem_n > 0,
+            lambda t_: store.write_batch(t_, n_acc - rem_n, ring),
+            lambda t_: t_, tok)
+        bufs = tok  # the ring is dead past this point; residual = token
     return (u_f, info), (bufs, n_acc, theta)
 
 
@@ -276,8 +343,8 @@ def _adaptive_fwd_solve(f, t0, t1, rtol, atol, max_steps, h0, store, fused,
 def _odeint_adaptive_fwd(f, t0, t1, rtol, atol, max_steps, h0, store,
                          segment, fused, obs, fault, u0, theta):
     out, res = _adaptive_fwd_solve(f, t0, t1, rtol, atol, max_steps, h0,
-                                   store, fused, u0, theta, obs=obs,
-                                   fault=fault)
+                                   store, segment, fused, u0, theta,
+                                   obs=obs, fault=fault)
     return out, res
 
 
@@ -288,7 +355,7 @@ def _odeint_adaptive_bwd(f, t0, t1, rtol, atol, max_steps, h0, store,
     if obs is not None:
         obs.record("adaptive.adjoint", max_steps=max_steps,
                    segment=segment,
-                   tier="spill" if store is not None else "device")
+                   tier=store.tier if store is not None else "device")
     bufs, n_acc, theta = res
     g_u, _g_info = g  # ignore cotangents of the counters
     spill = store is not None
@@ -329,6 +396,16 @@ def _odeint_adaptive_bwd(f, t0, t1, rtol, atol, max_steps, h0, store,
         def proc(args):
             lam, mu, tok = args
             tok2, staged = store.prefetch(tok, base, m)  # ONE callback
+            # software pipelining: queue the background gather of the next
+            # (earlier) segment while this one's adjoint computes; base <
+            # n_acc here, so nb < n_acc holds whenever nb >= 0 and the
+            # issued segment is never a skipped one
+            nb = base - seg
+            tok2 = jax.lax.cond(
+                nb >= 0,
+                lambda t_: store.prefetch_issue(t_, jnp.maximum(nb, 0),
+                                                seg),
+                lambda t_: t_, tok2)
 
             def step(c, i):
                 idx = base + i

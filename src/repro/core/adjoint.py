@@ -82,7 +82,7 @@ def _t_of(t0: float, dt: float, n) -> Any:
 # public API
 # ---------------------------------------------------------------------------
 
-_OFFLOAD_TIERS = (None, "device", "host", "spill")
+_OFFLOAD_TIERS = (None, "device", "host", "spill", "disk")
 
 
 def _validate_ncheck(adjoint: str, ncheck, n_steps: int) -> int:
@@ -154,7 +154,11 @@ def odeint(f: VectorField, u0: PyTree, theta: PyTree, *, dt: float,
            n_steps: int, t0: float = 0.0, method: str = "rk4",
            adjoint: str = "pnode", ncheck: int | None = None,
            offload: str | None = None, offload_segment: int | None = None,
+           snaps_in_ram: int | None = None,
+           offload_dir: str | None = None,
            mem_budget: int | None = None,
+           ram_budget: int | None = None,
+           disk_budget: int | None = None,
            mem_verify: str = "measure",
            fused_stages: bool = False,
            obs=None) -> PyTree:
@@ -165,10 +169,20 @@ def odeint(f: VectorField, u0: PyTree, theta: PyTree, *, dt: float,
     selects how the planner checks the budget ("measure": against the
     lowered HLO's peak live bytes, compiled once and cached; "model": the
     analytic Table-2 model only, no compilation).  ``offload`` routes the
-    policy's checkpoints through a ``repro.mem.offload`` store tier;
-    ``offload_segment`` sets the spill tier's checkpoint-segment length
-    (one host callback per segment; default ceil(sqrt(n_steps)) — see
-    ``repro.mem.offload.default_segment``).
+    policy's checkpoints through a ``repro.mem.offload`` store tier
+    ("disk" is the file-backed spill tier — same callbacks and bitwise
+    contract, payloads in segment files); ``offload_segment`` sets the
+    spill/disk tiers' checkpoint-segment length (one host callback per
+    segment; default ceil(sqrt(n_steps)) — see
+    ``repro.mem.offload.default_segment``).  ``snaps_in_ram`` caps the
+    spill tier's RAM-resident slot count (overflow sinks to disk files —
+    the dolfin-adjoint multistage split, applying to scanned pnode
+    segments and revolve slots alike); ``offload_dir`` pins the disk
+    tier's segment files to a caller-owned directory (stale files swept
+    on store init).  With ``adjoint="auto"``, ``ram_budget``/
+    ``disk_budget`` bound the spill fallback's RAM and disk footprints
+    (the planner solves the ``snaps_in_ram`` split; see
+    ``repro.mem.planner``).
 
     ``fused_stages=True`` lowers the RK stage-update chain (forward) and
     the per-stage adjoint recursion (reverse) to single Pallas
@@ -197,13 +211,22 @@ def odeint(f: VectorField, u0: PyTree, theta: PyTree, *, dt: float,
         from repro.mem.planner import plan_odeint  # deferred: import cycle
         plan = plan_odeint(f, u0, theta, dt=float(dt), n_steps=n_steps,
                            t0=float(t0), method=method,
-                           mem_budget=mem_budget, verify=mem_verify)
+                           mem_budget=mem_budget, ram_budget=ram_budget,
+                           disk_budget=disk_budget, verify=mem_verify)
         adjoint, ncheck = plan.policy, plan.ncheck
         offload = plan.offload if plan.offload is not None else offload
+        if plan.snaps_in_ram is not None and snaps_in_ram is None:
+            snaps_in_ram = plan.snaps_in_ram
     elif mem_budget is not None:
         raise ValueError(
             "mem_budget is only meaningful with adjoint='auto' (the planner "
             f"chooses the policy); got adjoint={adjoint!r}")
+    elif ram_budget is not None or disk_budget is not None:
+        raise ValueError(
+            "ram_budget/disk_budget are only meaningful with adjoint='auto' "
+            "(the planner solves the snaps_in_ram split); with an explicit "
+            "policy pass offload='spill'/'disk' and snaps_in_ram directly; "
+            f"got adjoint={adjoint!r}")
     if adjoint not in POLICIES:
         raise ValueError(f"unknown adjoint policy {adjoint!r}; one of "
                          f"{POLICIES} (or 'auto' with mem_budget)")
@@ -220,17 +243,17 @@ def odeint(f: VectorField, u0: PyTree, theta: PyTree, *, dt: float,
                 "the step graph and the Pallas stage kernels have no AD "
                 f"rules; use one of {_FUSED_POLICIES}")
     fused = bool(fused_stages)
-    offloaded = offload in ("host", "spill")
+    offloaded = offload in ("host", "spill", "disk")
     if offloaded and adjoint not in ("pnode", "revolve", "revolve2"):
         raise ValueError(
             f"offload={offload!r} is not supported for adjoint={adjoint!r}: "
             "only policies with explicit per-step checkpoints (pnode, "
             "revolve, revolve2) write through the store")
     if offload_segment is not None:
-        if offload != "spill":
+        if offload not in ("spill", "disk"):
             raise ValueError(
-                "offload_segment only applies to the callback spill tier "
-                f"(offload='spill'); got offload={offload!r}")
+                "offload_segment only applies to the callback spill/disk "
+                f"tiers; got offload={offload!r}")
         if adjoint != "pnode":
             raise ValueError(
                 "offload_segment only applies to the scanned pnode sweep "
@@ -242,6 +265,20 @@ def odeint(f: VectorField, u0: PyTree, theta: PyTree, *, dt: float,
         if offload_segment < 1:
             raise ValueError(
                 f"offload_segment must be >= 1, got {offload_segment}")
+    if snaps_in_ram is not None:
+        if offload != "spill":
+            raise ValueError(
+                "snaps_in_ram is the spill tier's RAM/disk split "
+                "(offload='spill'; offload='disk' is already the "
+                f"snaps_in_ram=0 corner); got offload={offload!r}")
+        snaps_in_ram = int(snaps_in_ram)
+        if snaps_in_ram < 0:
+            raise ValueError(
+                f"snaps_in_ram must be >= 0, got {snaps_in_ram}")
+    if offload_dir is not None and offload not in ("spill", "disk"):
+        raise ValueError(
+            "offload_dir pins the disk tier's segment files "
+            f"(offload='spill'/'disk'); got offload={offload!r}")
     if offloaded:
         _reject_vmap_offload(u0, theta, "odeint")
     if obs is not None:
@@ -256,7 +293,8 @@ def odeint(f: VectorField, u0: PyTree, theta: PyTree, *, dt: float,
     if adjoint in ("revolve", "revolve2"):
         ncheck = _validate_ncheck(adjoint, ncheck, n_steps)
         from repro.mem.offload import make_store  # deferred: import cycle
-        store = make_store(offload)
+        store = make_store(offload, snaps_in_ram=snaps_in_ram,
+                           disk_dir=offload_dir)
         if obs is not None:
             store.bind_obs(obs)
         impl = _odeint_revolve if adjoint == "revolve" else _odeint_revolve2
@@ -267,11 +305,12 @@ def odeint(f: VectorField, u0: PyTree, theta: PyTree, *, dt: float,
             raise ValueError(
                 "offload='host' applies to trace-time checkpoint sites "
                 "(revolve/revolve2); the scanned pnode sweep offloads "
-                "through offload='spill'")
+                "through offload='spill' or 'disk'")
         from repro.mem.offload import default_segment, make_store
         segment = (offload_segment if offload_segment is not None
                    else default_segment(n_steps))
-        store = make_store("spill")
+        store = make_store(offload, snaps_in_ram=snaps_in_ram,
+                           disk_dir=offload_dir)
         if obs is not None:
             store.bind_obs(obs)
         return _odeint_pnode_spill(f, method, float(t0), float(dt), n_steps,
@@ -667,6 +706,14 @@ _odeint_revolve2.defvjp(_odeint_revolve2_fwd, _odeint_revolve2_bwd)
 # 2*N_t to 2*ceil(N_t/segment) (BENCH_3), at a device cost of
 # segment*(N_s+1) staged state vectors — sublinear with the default
 # segment = ceil(sqrt(N_t)) (repro.mem.offload.default_segment).
+#
+# The reverse sweep is additionally SOFTWARE-PIPELINED: right after waiting
+# on segment k's prefetch it issues the background gather of segment k-1
+# (`prefetch_issue` — a token-only callback that queues the host/disk read
+# on the store's executor), so segment I/O overlaps the adjoint compute of
+# the segment in hand.  Works for the RAM dict and the disk tier alike;
+# `prefetch_hit_cb` counts how many waits were actually served from the
+# pipeline.
 # ---------------------------------------------------------------------------
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3, 4, 5, 6, 7))
@@ -718,6 +765,16 @@ def _odeint_pnode_spill_bwd(f, method, t0, dt, n_steps, store, segment,
 
     def run_segment_bwd(lam, mu, tok, base, m):
         tok, staged = store.prefetch(tok, base, m)  # ONE callback, m slots
+        # software pipelining: with this segment's data in hand, dispatch
+        # the background gather of the NEXT segment to be consumed (the
+        # earlier one — the sweep runs in reverse), so its host/disk I/O
+        # overlaps the adjoint compute below.  The issue rides the token
+        # chain, so it cannot reorder around the read it follows.
+        nb = base - segment
+        tok = jax.lax.cond(
+            nb >= 0,
+            lambda t: store.prefetch_issue(t, jnp.maximum(nb, 0), segment),
+            lambda t: t, tok)
 
         def step(carry, i):
             lam, mu = carry
@@ -735,6 +792,9 @@ def _odeint_pnode_spill_bwd(f, method, t0, dt, n_steps, store, segment,
     if rem:  # the trailing partial segment is adjointed first
         lam, mu, tok = run_segment_bwd(lam, mu, tok,
                                        jnp.asarray(n_full * segment), rem)
+    elif n_full:  # no remainder: warm the pipeline for the first read
+        tok = store.prefetch_issue(tok, jnp.asarray((n_full - 1) * segment),
+                                   segment)
     if n_full:
         def seg_body(carry, s_idx):
             lam, mu, tok = carry

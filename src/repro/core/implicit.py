@@ -438,6 +438,8 @@ def odeint_implicit(f: VectorField, u0: PyTree, theta_p: PyTree, *, dt: float,
                     adjoint: str = "pnode", ncheck: int | None = None,
                     offload: str | None = None,
                     offload_segment: int | None = None,
+                    snaps_in_ram: int | None = None,
+                    offload_dir: str | None = None,
                     mem_budget: int | None = None,
                     mem_verify: str = "measure",
                     newton_iters: int = 10, newton_tol: float = 1e-9,
@@ -451,8 +453,9 @@ def odeint_implicit(f: VectorField, u0: PyTree, theta_p: PyTree, *, dt: float,
     ``revolve`` / ``revolve2``; ``auto`` + ``mem_budget=<bytes>`` delegates
     to the ``repro.mem`` planner, which knows the implicit cost model).
     ``offload`` routes checkpoints through a ``repro.mem.offload`` store
-    tier exactly like the explicit ``odeint``; gradients are
-    bitwise-identical across tiers.  ``return_stats=True`` returns
+    tier exactly like the explicit ``odeint`` (including the ``disk``
+    tier and the ``snaps_in_ram``/``offload_dir`` RAM/disk split knobs);
+    gradients are bitwise-identical across tiers.  ``return_stats=True`` returns
     ``(u_final, ImplicitStats)`` so Newton/GMRES non-convergence surfaces
     as ``stats.diverged`` instead of silently wrong states/gradients.
 
@@ -486,8 +489,8 @@ def odeint_implicit(f: VectorField, u0: PyTree, theta_p: PyTree, *, dt: float,
     traced ``newton`` nan/inf/diverge gates keyed by absolute step index
     (they re-fire identically on adjoint recomputes — required for bitwise
     recovery), host-side spill callback drops/corruption/flakes, and tier
-    outages that degrade ``offload`` down the spill→host→device ladder
-    before the store is built.
+    outages that degrade ``offload`` down the spill→disk→host→device
+    ladder before the store is built.
 
     ``resilient=True`` (scanned pnode+spill path only) checksums spilled
     segments and, when the bwd prefetch fails verification, re-integrates
@@ -528,6 +531,8 @@ def odeint_implicit(f: VectorField, u0: PyTree, theta_p: PyTree, *, dt: float,
                              gmres_tol=float(gmres_tol)))
         adjoint, ncheck = plan.policy, plan.ncheck
         offload = plan.offload if plan.offload is not None else offload
+        if plan.snaps_in_ram is not None and snaps_in_ram is None:
+            snaps_in_ram = plan.snaps_in_ram
     elif mem_budget is not None:
         raise ValueError(
             "mem_budget is only meaningful with adjoint='auto' (the planner "
@@ -546,12 +551,12 @@ def odeint_implicit(f: VectorField, u0: PyTree, theta_p: PyTree, *, dt: float,
     if offload not in _OFFLOAD_TIERS:
         raise ValueError(f"unknown offload tier {offload!r}; one of "
                          f"{_OFFLOAD_TIERS}")
-    offloaded = offload in ("host", "spill")
+    offloaded = offload in ("host", "spill", "disk")
     if offload_segment is not None:
-        if offload != "spill":
+        if offload not in ("spill", "disk"):
             raise ValueError(
-                "offload_segment only applies to the callback spill tier "
-                f"(offload='spill'); got offload={offload!r}")
+                "offload_segment only applies to the callback spill tiers "
+                f"(offload='spill'/'disk'); got offload={offload!r}")
         if adjoint != "pnode":
             raise ValueError(
                 "offload_segment only applies to the scanned pnode sweep "
@@ -561,17 +566,34 @@ def odeint_implicit(f: VectorField, u0: PyTree, theta_p: PyTree, *, dt: float,
         if offload_segment < 1:
             raise ValueError(
                 f"offload_segment must be >= 1, got {offload_segment}")
+    if snaps_in_ram is not None:
+        if offload != "spill":
+            raise ValueError(
+                "snaps_in_ram is the spill tier's RAM/disk split "
+                "(offload='spill'; offload='disk' is the snaps_in_ram=0 "
+                f"corner); got offload={offload!r}")
+        snaps_in_ram = int(snaps_in_ram)
+        if snaps_in_ram < 0:
+            raise ValueError(
+                f"snaps_in_ram must be >= 0, got {snaps_in_ram}")
+    if offload_dir is not None and offload not in ("spill", "disk"):
+        raise ValueError(
+            "offload_dir pins the disk tier's segment files "
+            "(offload='spill'/'disk'); got offload="
+            f"{offload!r}")
 
     if rescue is True:
         rescue = RescueConfig()
     if rescue is not None and not isinstance(rescue, RescueConfig):
         raise ValueError(f"rescue must be a RescueConfig, True, or None; "
                          f"got {rescue!r}")
-    if resilient and not (adjoint == "pnode" and offload == "spill"):
+    if resilient and not (adjoint == "pnode"
+                          and offload in ("spill", "disk")):
         raise ValueError(
             "resilient=True (checked prefetch + recompute fallback) applies "
-            "to the scanned spill path (adjoint='pnode', offload='spill'); "
-            f"got adjoint={adjoint!r}, offload={offload!r}")
+            "to the scanned spill paths (adjoint='pnode', "
+            f"offload='spill'/'disk'); got adjoint={adjoint!r}, "
+            f"offload={offload!r}")
     if fault_plan is not None and offloaded:
         # tier outage in the plan: walk the degradation ladder BEFORE the
         # store is built, so the solve runs on a healthy tier
@@ -580,10 +602,11 @@ def odeint_implicit(f: VectorField, u0: PyTree, theta_p: PyTree, *, dt: float,
                              scanned=(adjoint == "pnode"), obs=obs)
         if eff != offload:
             offload = eff
-            offloaded = offload in ("host", "spill")
-            if offload != "spill":
+            offloaded = offload in ("host", "spill", "disk")
+            if offload not in ("spill", "disk"):
                 offload_segment = None
-            resilient = resilient and offload == "spill"
+                snaps_in_ram = None
+            resilient = resilient and offload in ("spill", "disk")
 
     cfg = _SolverConfig(theta, int(newton_iters), float(newton_tol),
                         int(gmres_iters), float(gmres_tol),
@@ -613,7 +636,8 @@ def odeint_implicit(f: VectorField, u0: PyTree, theta_p: PyTree, *, dt: float,
             _reject_vmap_offload(u0, theta_p,
                                  f"odeint_implicit(adjoint={adjoint!r})")
         from repro.mem.offload import make_store  # deferred: import cycle
-        store = make_store(offload, fault_plan=fault_plan)
+        store = make_store(offload, fault_plan=fault_plan,
+                           snaps_in_ram=snaps_in_ram, disk_dir=offload_dir)
         if obs is not None:
             store.bind_obs(obs)
         impl = _imp_revolve if adjoint == "revolve" else _imp_revolve2
@@ -629,8 +653,9 @@ def odeint_implicit(f: VectorField, u0: PyTree, theta_p: PyTree, *, dt: float,
                                        make_store)
         segment = (offload_segment if offload_segment is not None
                    else default_segment(n_steps))
-        store = make_store("spill", fault_plan=fault_plan,
-                           integrity=bool(resilient))
+        store = make_store(offload, fault_plan=fault_plan,
+                           integrity=bool(resilient),
+                           snaps_in_ram=snaps_in_ram, disk_dir=offload_dir)
         if obs is not None:
             store.bind_obs(obs)
         # mapped axes are only visible HERE (as BatchTracers on the args);
@@ -1010,6 +1035,18 @@ def _imp_spill_bwd(f, cfg, t0, dt, n_steps, store, segment, res, ct):
                 obs.emit("spill.recover", base=jnp.asarray(base), ok=ok)
         else:
             tok, states = store.prefetch(tok, base, m)  # ONE callback
+            # software-pipeline the NEXT (earlier) full segment: queue its
+            # background gather now so segment base-segment streams in
+            # while this segment's adjoint scan runs (no-op for tiers
+            # without an async path; resilient mode stays synchronous so
+            # checksum verification and fault injection keep their
+            # deterministic callback order)
+            nb = base - segment
+            tok = jax.lax.cond(
+                nb >= 0,
+                lambda t: store.prefetch_issue(t, jnp.maximum(nb, 0),
+                                               segment),
+                lambda t: t, tok)
         u_nexts = jtu.tree_map(
             lambda s, un: jnp.concatenate([s[1:], un[None]], axis=0), states,
             u_next)
@@ -1034,6 +1071,11 @@ def _imp_spill_bwd(f, cfg, t0, dt, n_steps, store, segment, res, ct):
         lam, mu, u_next, tok = run_segment_bwd(
             lam, mu, u_next, tok, jnp.asarray(n_full * segment), rem,
             rem_start)
+    elif n_full and not resilient:
+        # no partial segment issued the first background gather — warm the
+        # pipeline for the last full segment before the scan consumes it
+        tok = store.prefetch_issue(tok, jnp.asarray((n_full - 1) * segment),
+                                   segment)
     if n_full:
         def seg_body(carry, inp):
             s_idx, u_start = inp

@@ -169,6 +169,9 @@ def train(cfg: ModelConfig, cell: ShapeCell, *, steps: int, mesh=None,
             if sentinel:
                 cargs = cargs + (False,)
             measured_peak = _compiled_peak_bytes(step_fn, *cargs)
+            # a zero/absent prediction (planner skipped, dryrun config)
+            # must still log the compile record — with drift=null — not
+            # die on the division below
             drift = None
             if measured_peak is not None and predicted_peak_bytes:
                 # the planner prices live *activations*; the compiled peak
@@ -176,8 +179,9 @@ def train(cfg: ModelConfig, cell: ShapeCell, *, steps: int, mesh=None,
                 from repro.mem.model import tree_bytes
                 predicted_peak_bytes = predicted_peak_bytes + tree_bytes(
                     (params, opt_state, first))
-                drift = measured_peak / predicted_peak_bytes - 1.0
-                if abs(drift) > 0.25:
+                if predicted_peak_bytes > 0:
+                    drift = measured_peak / predicted_peak_bytes - 1.0
+                if drift is not None and abs(drift) > 0.25:
                     slog.log("train.peak_drift",
                              f"[train] WARNING: measured peak "
                              f"{measured_peak} B is {drift:+.0%} off the "

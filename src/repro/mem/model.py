@@ -21,6 +21,16 @@ N_l-dependent term that makes NODE-naive the steepest curve in Fig. 3).
 An ``offload`` tier moves the ckpt-storage term off device (see
 ``repro.mem.offload``); it never changes NFE-B.
 
+Off-device storage is itself two-tiered (the dolfin-adjoint multistage
+split): ``snaps_in_ram`` caps how many checkpoint slots stay RAM-resident,
+the overflow sinks to segment files on disk (``offload="disk"`` is the
+all-disk corner).  ``CostEstimate`` prices the split with per-tier byte
+columns (``ram_bytes``/``disk_bytes``) and a modeled transfer time
+(``io_seconds`` — one fwd write + one bwd read of every slot at the
+tier's bandwidth, plus per-callback latency), so the planner can solve
+the ``snaps_in_ram`` split under separate RAM and disk byte budgets and
+rank tiers by I/O cost where NFE-B ties.
+
 Implicit theta-methods (``method="beuler"|"cn"``) dispatch to their own
 Table-2 column (``core.implicit``): a checkpoint slot is ONE converged
 state (S bytes — the Newton/GMRES iterates never enter the graph), the
@@ -61,6 +71,46 @@ PyTree = Any
 #: policies whose gradients are exact reorderings of the naive chain rule
 REVERSE_ACCURATE = ("naive", "anode", "aca", "pnode", "pnode2", "revolve",
                     "revolve2")
+
+#: modeled off-device transfer rates: host-RAM copies (pinned-host /
+#: callback-dict) vs segment-file disk I/O, plus the fixed cost of one
+#: host callback round-trip.  Coarse XLA:CPU figures — the planner uses
+#: the RAM:disk *ratio* to price the snaps_in_ram split, so absolute
+#: calibration is not load-bearing (measured peaks gate the budget, not
+#: these).
+HOST_COPY_BW = 8e9       # bytes/s
+DISK_BW = 500e6          # bytes/s
+CALLBACK_LATENCY_S = 50e-6
+
+
+def slot_bytes(method: str, state_bytes: int) -> int:
+    """Bytes of ONE checkpoint slot: (N_s+1)*S for explicit tableaus
+    (state + staged k_i), S for implicit methods (converged states only).
+    The unit of the ``snaps_in_ram`` RAM/disk split."""
+    if is_implicit_method(method):
+        return int(state_bytes)
+    return (get_tableau(method).num_stages + 1) * int(state_bytes)
+
+
+def _offload_io(offload: Optional[str], ckpt_bytes: int, callbacks: int,
+                method: str, state_bytes: int,
+                snaps_in_ram: Optional[int]) -> Tuple[int, int, float]:
+    """(ram_bytes, disk_bytes, io_seconds) of one fwd+bwd round trip: the
+    off-device checkpoint set split across the RAM/disk media, each byte
+    written once and read once at its tier's bandwidth."""
+    if offload not in ("host", "spill", "disk") or ckpt_bytes <= 0:
+        return 0, 0, 0.0
+    if offload == "disk":
+        ram, disk = 0, int(ckpt_bytes)
+    elif offload == "spill" and snaps_in_ram is not None:
+        sb = max(1, slot_bytes(method, state_bytes))
+        ram = min(int(ckpt_bytes), int(snaps_in_ram) * sb)
+        disk = int(ckpt_bytes) - ram
+    else:  # host, or spill with unlimited RAM
+        ram, disk = int(ckpt_bytes), 0
+    io = 2.0 * (ram / HOST_COPY_BW + disk / DISK_BW) \
+        + callbacks * CALLBACK_LATENCY_S
+    return ram, disk, io
 
 
 def tree_bytes(tree: PyTree) -> int:
@@ -108,13 +158,16 @@ class CostEstimate:
     extra_fevals: int      # NFE-B: reverse-pass f evaluations
     reverse_accurate: bool
     host_callbacks: int = 0  # host round-trips per reverse pass (spill tier)
+    ram_bytes: int = 0       # off-device ckpt bytes resident in host RAM
+    disk_bytes: int = 0      # off-device ckpt bytes sunk to segment files
+    io_seconds: float = 0.0  # modeled fwd-write + bwd-read transfer time
 
     @property
     def peak_bytes(self) -> int:
         """Predicted device-live peak: offloaded ckpt storage leaves the
-        device, everything else stays (including, for the spill tier, the
+        device, everything else stays (including, for the spill tiers, the
         segment staging buffer folded into work_bytes)."""
-        if self.offload in ("host", "spill"):
+        if self.offload in ("host", "spill", "disk"):
             return self.work_bytes
         return self.ckpt_bytes + self.work_bytes
 
@@ -158,8 +211,9 @@ _IMPLICIT_WORK_STATES = 4
 def _implicit_policy_cost(policy: str, *, n_steps: int, state_bytes: int,
                           theta_bytes: int, ncheck: Optional[int],
                           offload: Optional[str], segment: Optional[int],
-                          newton_iters: int, gmres_iters: int
-                          ) -> CostEstimate:
+                          newton_iters: int, gmres_iters: int,
+                          snaps_in_ram: Optional[int] = None,
+                          method: str = "cn") -> CostEstimate:
     """Implicit-family Table-2 row: checkpoints are converged states only
     (S bytes/slot), work is Krylov-basis dominated, recompute is Newton
     solves (see module docstring)."""
@@ -176,7 +230,7 @@ def _implicit_policy_cost(policy: str, *, n_steps: int, state_bytes: int,
                                   newton_iters=newton_iters,
                                   gmres_iters=gmres_iters)
     callbacks = 0
-    if offload == "spill":
+    if offload in ("spill", "disk"):
         callbacks = spill_callback_counts(policy, n_steps, ncheck=ncheck,
                                           segment=segment)["total"]
         if policy == "pnode":
@@ -184,10 +238,13 @@ def _implicit_policy_cost(policy: str, *, n_steps: int, state_bytes: int,
             from repro.mem.offload import default_segment
             seg = min(segment or default_segment(n_steps), n_steps)
             work += seg * state_bytes
+    ram, disk, io = _offload_io(offload, int(ckpt), callbacks, method,
+                                state_bytes, snaps_in_ram)
     return CostEstimate(policy=policy, ncheck=ncheck, offload=offload,
                         ckpt_bytes=int(ckpt), work_bytes=int(work),
                         extra_fevals=int(extra), reverse_accurate=True,
-                        host_callbacks=int(callbacks))
+                        host_callbacks=int(callbacks), ram_bytes=ram,
+                        disk_bytes=disk, io_seconds=io)
 
 
 def policy_cost(policy: str, *, method: str, n_steps: int, state_bytes: int,
@@ -196,16 +253,21 @@ def policy_cost(policy: str, *, method: str, n_steps: int, state_bytes: int,
                 offload: Optional[str] = None,
                 segment: Optional[int] = None,
                 newton_iters: int = 10,
-                gmres_iters: int = 20) -> CostEstimate:
+                gmres_iters: int = 20,
+                snaps_in_ram: Optional[int] = None) -> CostEstimate:
     """Analytic (peak bytes, extra f-evals) for one policy instance.
-    ``newton_iters``/``gmres_iters`` only affect implicit methods."""
+    ``newton_iters``/``gmres_iters`` only affect implicit methods;
+    ``snaps_in_ram`` prices the spill tier's RAM/disk slot split
+    (``ram_bytes``/``disk_bytes``/``io_seconds`` columns)."""
     if is_implicit_method(method):
         return _implicit_policy_cost(policy, n_steps=n_steps,
                                      state_bytes=state_bytes,
                                      theta_bytes=theta_bytes, ncheck=ncheck,
                                      offload=offload, segment=segment,
                                      newton_iters=newton_iters,
-                                     gmres_iters=gmres_iters)
+                                     gmres_iters=gmres_iters,
+                                     snaps_in_ram=snaps_in_ram,
+                                     method=method)
     tab = get_tableau(method)
     s = tab.num_stages
     fa = f_act_bytes if f_act_bytes is not None else state_bytes
@@ -225,7 +287,7 @@ def policy_cost(policy: str, *, method: str, n_steps: int, state_bytes: int,
     extra = nfe_backward(method, n_steps, policy,
                          ncheck=ncheck) if policy != "naive" else 0
     callbacks = 0
-    if offload == "spill":
+    if offload in ("spill", "disk"):
         callbacks = spill_callback_counts(policy, n_steps, ncheck=ncheck,
                                           segment=segment)["total"]
         if policy == "pnode":
@@ -234,11 +296,14 @@ def policy_cost(policy: str, *, method: str, n_steps: int, state_bytes: int,
             from repro.mem.offload import default_segment
             seg = min(segment or default_segment(n_steps), n_steps)
             work += seg * (s + 1) * state_bytes
+    ram, disk, io = _offload_io(offload, int(ckpt), callbacks, method,
+                                state_bytes, snaps_in_ram)
     return CostEstimate(policy=policy, ncheck=ncheck, offload=offload,
                         ckpt_bytes=int(ckpt), work_bytes=int(work),
                         extra_fevals=int(extra),
                         reverse_accurate=policy in REVERSE_ACCURATE,
-                        host_callbacks=int(callbacks))
+                        host_callbacks=int(callbacks), ram_bytes=ram,
+                        disk_bytes=disk, io_seconds=io)
 
 
 def max_fitting_ncheck(budget: int, *, method: str, n_steps: int,

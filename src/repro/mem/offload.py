@@ -2,7 +2,7 @@
 
 The revolve/pnode adjoints in ``core/adjoint.py`` write (state, stages)
 checkpoints through one of these stores instead of returning them directly
-as ``custom_vjp`` residuals.  Three tiers:
+as ``custom_vjp`` residuals.  Four tiers:
 
   device   checkpoints stay traced values and travel through the residual
            pytree — exactly the seed behavior (XLA keeps them in device
@@ -29,6 +29,30 @@ as ``custom_vjp`` residuals.  Three tiers:
            (``io_callback(ordered=True)`` would be the natural primitive,
            but its effects are silently dropped inside ``custom_vjp`` rules
            on jax 0.4.37 — verified empirically — hence the token chain.)
+  disk     the spill machinery with its slot payloads routed to
+           file-backed segment files (``repro_spill_*.npz`` under a
+           temp/caller directory) instead of the host RAM dict.  Same
+           callbacks, same token contract, same CRC-integrity and
+           retry-backoff behavior — only WHERE the host side of the
+           callback puts the bytes changes, so every bitwise-gradient
+           contract that holds for ``spill`` holds for ``disk`` unchanged.
+
+Multi-tier split (``snaps_in_ram``): a spill store built with
+``snaps_in_ram=K`` keeps at most K checkpoint slots resident in the RAM
+dict and routes overflow batches to disk files — dolfin-adjoint's
+multistage ``snaps_in_ram``/``snaps_on_disk`` shape (SNIPPETS.md snippet
+2).  Routing is per write batch (a segment lands wholly in one tier, so a
+prefetch usually touches one medium) and per slot on the slot-addressed
+revolve path; freeing RAM slots makes room again, so a revolve schedule's
+hot window stays in RAM while cold snapshots sink to disk.
+``snaps_in_ram=None`` (default) is the historical all-RAM store;
+``snaps_in_ram=0`` (what ``make_store("disk")`` configures) is all-disk.
+Disk files hold one write batch each (one ``np.savez`` extent, no pickle),
+with a slot->file index, a one-file read cache sized for the
+segment-aligned access pattern, refcounted deletion, a stale-file sweep on
+``set_disk_dir`` (dead runs' ``repro_spill_*.npz`` are removed), and a
+``weakref.finalize`` that deletes this store's files (and its own tempdir)
+at GC/exit.
 
 Two addressing modes, matching the two checkpoint write paths:
 
@@ -36,22 +60,36 @@ Two addressing modes, matching the two checkpoint write paths:
     the trace-time-unrolled revolve schedule addresses checkpoints by step
     index known at trace time;
   * indexed writes (``write_at``) take a *traced* index and thread the
-    token explicitly — the adaptive ring buffer addresses by a
-    loop-carried counter (with a ``keep`` mask for rejected steps); reads
-    on the scanned paths go through the segment-batched ``prefetch``.
+    token explicitly — reads on the scanned paths go through the
+    segment-batched ``prefetch``.  (The adaptive forward sweep used to
+    ``write_at`` once per attempted step; it now batches accepted steps
+    through a device-side staging ring and flushes with ``write_batch``
+    once per segment — see ``core/adaptive.py``.)
 
 Segment-batched I/O (``write_batch``/``prefetch``): one callback per
 checkpoint *segment* instead of per step.  ``write_batch(token, base, tree)``
 stores ``seg`` consecutive slots from leaves stacked on axis 0;
-``prefetch(token, base, seg)`` returns slots ``[base, base+seg)`` stacked —
-a double-buffer-capable read: because it returns a fresh token and the
-buffer it fills is an ordinary traced value, a caller may issue the
-prefetch for segment k+1 before consuming segment k's buffer and overlap
-host I/O with compute on backends with async callbacks (on XLA:CPU
-``pure_callback`` is synchronous, so the batching win here is the callback
-*count*, not overlap).  The scanned pnode/adaptive reverse sweeps use
-these to cut host round-trips from O(n_steps) to O(n_segments); token
-threading is unchanged, so frees still cannot reorder ahead of reads.
+``prefetch(token, base, seg)`` returns slots ``[base, base+seg)`` stacked.
+The scanned pnode/adaptive/implicit reverse sweeps use these to cut host
+round-trips from O(n_steps) to O(n_segments); token threading is
+unchanged, so frees still cannot reorder ahead of reads.
+
+Async overlap (``prefetch_issue``): ``prefetch`` alone is synchronous on
+XLA:CPU (``pure_callback`` blocks), so batching wins the callback *count*
+but not overlap.  ``prefetch_issue(token, base, seg)`` is the overlap
+half: a token-only callback that SUBMITS the host-side gather of
+``[base, base+seg)`` to the store's single-worker background executor and
+returns immediately; the matching ``prefetch``/``prefetch_checked`` at the
+same base consumes the staged rows (``prefetch_hit_cb`` counts the hits)
+instead of re-reading storage.  The reverse sweeps issue segment k-1's
+gather right after waiting on segment k, so disk/dict I/O overlaps the
+adjoint compute of the current segment.  Fault injection, integrity
+verification, and retry-backoff stay in the synchronous wait callback (the
+background task is a raw gather), so chaos schedules remain deterministic.
+Ordering: the issue, the wait, and any later free all ride the one token
+chain, and the wait blocks on the background future before returning — so
+a free ordered after the wait cannot overtake the read.  Do not order a
+free of the same slots BETWEEN an issue and its wait (no caller does).
 
 Payload cap: XLA:CPU copies callback operands/results on the same intra-op
 thread pool the callback itself occupies, and once a single buffer is
@@ -75,17 +113,24 @@ on its own thread pool, so a chunked/vmapped program's callbacks can run
 concurrently with each other and with a benchmark's
 ``reset_spill_stats()`` on the main thread — unlocked dict updates would
 lose increments or tear the reset.  Counters count actual EXECUTIONS, not
-traces.  Attaching a ``repro.obs.FlightRecorder`` via ``bind_obs`` makes
-every callback additionally record a ``spill.write``/``spill.read``/
-``spill.free`` trace event carrying the store id, slot base, slot count,
-and payload bytes — recorded purely host-side inside the callbacks that
-already run, so the traced program is unchanged and grads stay bitwise
-identical with obs on.
+traces.  ``read_cb``/``write_cb`` count data-carrying round-trips only;
+``dispatch_cb`` counts the token-only async-issue callbacks separately so
+the BENCH_3 callbacks-per-reverse-pass gates keep their historical
+meaning.  ``disk_write_bytes``/``disk_read_bytes`` break the byte traffic
+down by medium, and ``ram_bytes_peak`` is a high-water gauge of the RAM
+dict (max-merged into the aggregate; zeroed by ``reset_spill_stats``) —
+the number the BENCH_6 RAM-budget gate checks.  Attaching a
+``repro.obs.FlightRecorder`` via ``bind_obs`` makes every callback
+additionally record a ``spill.write``/``spill.read``/``spill.free``/
+``spill.dispatch`` trace event carrying the store id, slot base, slot
+count, payload bytes, and the medium (``tier="ram"|"disk"|"mixed"``) —
+recorded purely host-side inside the callbacks that already run, so the
+traced program is unchanged and grads stay bitwise identical with obs on.
 
 Table-2 mapping (see ``repro.mem.model``): the store only changes WHERE
 N_c*(N_s+1) checkpoint vectors live, never how many f-evaluations the
-policy performs — spill grads are bitwise-identical to device grads
-(tests/test_mem.py).
+policy performs — spill and disk grads are bitwise-identical to device
+grads (tests/test_mem.py, tests/test_longhaul.py).
 
 vmap: the *slot-addressed* mode is not supported under ``vmap`` (the
 callback sees one logical index for the whole batch, so per-example
@@ -95,7 +140,9 @@ one callback serves the entire batch, each slot stores the full batch
 block with batch axes leading, so element b's checkpoints occupy index b
 of the block — the per-batch-element key scheme the vmapped implicit
 ensembles rely on (``core.implicit``).  Stores are per-``odeint``-call
-objects, so concurrent solves never share keys.
+objects, so concurrent solves never share keys (a caller-owned
+``disk_dir`` likewise belongs to one live store at a time — the stale
+sweep on init assumes any file it finds is from a dead run).
 
 Resilience (PR 8; all dormant-by-default, the plain paths above are
 byte-identical when unused):
@@ -108,21 +155,28 @@ byte-identical when unused):
     re-integrating the segment from its boundary state instead of
     consuming garbage.  Corruption is modeled *at rest*: an injected
     ``spill.write``/``corrupt`` fault flips stored bytes after
-    checksumming, which is exactly what the read-side verify catches.
+    checksumming, which is exactly what the read-side verify catches —
+    on the disk tier the flipped bytes are what lands in the segment
+    file, so on-disk corruption takes the identical recompute path.
   * reads retry with exponential backoff (host-side ``time.sleep``; never
     in traced code) up to ``max_retries`` times when a ``FaultPlan``
     flakes the attempt — transient faults cost ``retry_cb`` ticks and
     succeed; persistent ones surface as ``ok=False`` (checked) or a
     ``RuntimeError`` (unchecked paths have no recompute fallback).
   * ``effective_tier(tier, fault_plan)`` walks the degradation ladder
-    spill -> host -> device past tiers the plan marks down
+    spill -> disk -> host -> device past tiers the plan marks down
     (``FaultSpec("tier.spill", 0, "down")``), recording ``store.degrade``
-    obs events; scanned sweeps skip the slot-addressed host tier and
-    degrade spill straight to device.
+    obs events; scanned sweeps skip the slot-addressed host tier, so for
+    them a downed disk tier degrades straight to device (disk itself IS
+    scanned-capable — it's the same callbacks).
 """
 from __future__ import annotations
 
+import glob
 import itertools
+import os
+import shutil
+import tempfile
 import threading
 import time
 import weakref
@@ -138,7 +192,7 @@ from repro.obs.profile import host_annotation
 
 PyTree = Any
 
-TIERS = ("device", "host", "spill")
+TIERS = ("device", "host", "spill", "disk")
 
 _TOKEN_SDS = jax.ShapeDtypeStruct((), jnp.float32)
 
@@ -147,6 +201,10 @@ _TOKEN_SDS = jax.ShapeDtypeStruct((), jnp.float32)
 #: buffer copy is parallelized on the pool the callback blocks, and the
 #: program deadlocks (see module docstring); 96 KiB keeps headroom.
 _CB_PAYLOAD_CAP = 96 * 1024
+
+#: filename prefix for disk-tier segment files; ``set_disk_dir`` sweeps
+#: stale matches (files left by a dead run) before reusing a directory.
+_DISK_PREFIX = "repro_spill_"
 
 
 def batch_scale(tree: PyTree) -> int:
@@ -207,12 +265,19 @@ def _chunk_slots(seg: int, per_slot_bytes: int) -> int:
     return min(m, seg)
 
 #: counter keys every SpillStore tracks (per store and in the aggregate):
-#: ``*_cb`` counts host round-trips, ``*_slots`` checkpoint slots moved
-#: (slots/cb = achieved batching factor), ``*_bytes`` payload traffic;
-#: ``retry_cb`` counts read attempts repeated after an injected flake and
-#: ``integrity_fail`` slots that failed their checksum/presence check.
+#: ``*_cb`` counts data-carrying host round-trips, ``*_slots`` checkpoint
+#: slots moved (slots/cb = achieved batching factor), ``*_bytes`` payload
+#: traffic; ``dispatch_cb`` counts token-only async prefetch issues and
+#: ``prefetch_hit_cb`` the waits that consumed a background gather;
+#: ``disk_*_bytes`` is the slice of the byte traffic that hit segment
+#: files; ``ram_bytes_peak`` is a high-water gauge (max-merged, not
+#: summed) of the RAM dict; ``retry_cb`` counts read attempts repeated
+#: after an injected flake and ``integrity_fail`` slots that failed their
+#: checksum/presence check.
 _STAT_KEYS = ("write_cb", "read_cb", "free_cb",
               "write_slots", "read_slots", "write_bytes", "read_bytes",
+              "dispatch_cb", "prefetch_hit_cb",
+              "disk_write_bytes", "disk_read_bytes", "ram_bytes_peak",
               "retry_cb", "integrity_fail")
 
 #: guards ALL counter mutation and the reset: callbacks execute on XLA's
@@ -292,7 +357,7 @@ def host_memory_kind() -> Optional[str]:
 
 
 #: degradation ladder: where a tier falls when a fault plan marks it down
-_LADDER = {"spill": "host", "host": "device"}
+_LADDER = {"spill": "disk", "disk": "host", "host": "device"}
 
 
 def _crc_leaves(arrs) -> int:
@@ -303,20 +368,39 @@ def _crc_leaves(arrs) -> int:
     return c
 
 
+def _cleanup_disk(paths: List[str], root: Optional[str], owned: bool) -> None:
+    """weakref.finalize target: delete this store's segment files and, if
+    the store created its own tempdir, the directory itself.  Module-level
+    (no bound self) so the finalizer does not keep the store alive."""
+    for p in paths:
+        try:
+            os.unlink(p)
+        except OSError:
+            pass
+    if owned and root:
+        shutil.rmtree(root, ignore_errors=True)
+
+
+def _shutdown_exec(ex) -> None:
+    """weakref.finalize target for the prefetch executor."""
+    ex.shutdown(wait=False)
+
+
 def effective_tier(tier: Optional[str], fault_plan=None, *,
                    scanned: bool = False, obs=None) -> Optional[str]:
-    """Walk the degradation ladder (spill -> host -> device) past tiers a
-    ``FaultPlan`` marks unavailable (``FaultSpec("tier.<t>", 0, "down")``).
-    Returns the first available tier; each hop is recorded as a
-    ``store.degrade`` obs event when a recorder is given.  ``scanned=True``
-    says the caller is a scanned segment-batched sweep, which cannot use
-    the slot-addressed host tier — spill then degrades straight to
-    device."""
+    """Walk the degradation ladder (spill -> disk -> host -> device) past
+    tiers a ``FaultPlan`` marks unavailable (``FaultSpec("tier.<t>", 0,
+    "down")``).  Returns the first available tier; each hop is recorded as
+    a ``store.degrade`` obs event when a recorder is given.
+    ``scanned=True`` says the caller is a scanned segment-batched sweep,
+    which cannot use the slot-addressed host tier — a downed disk tier
+    then degrades straight to device (disk itself is scanned-capable, so
+    spill -> disk holds for scanned sweeps too)."""
     if fault_plan is None or tier in (None, "device"):
         return tier
     cur = tier
     while cur not in (None, "device") and fault_plan.tier_disabled(cur):
-        nxt = "device" if (scanned and cur == "spill") else _LADDER[cur]
+        nxt = "device" if (scanned and cur == "disk") else _LADDER[cur]
         if obs is not None:
             obs.record("store.degrade", requested=tier, from_tier=cur,
                        to_tier=nxt, scanned=bool(scanned))
@@ -326,24 +410,36 @@ def effective_tier(tier: Optional[str], fault_plan=None, *,
 
 def make_store(tier: Optional[str], *, fault_plan=None,
                integrity: bool = False, max_retries: int = 3,
-               retry_backoff_s: float = 1e-3) -> "CheckpointStore":
+               retry_backoff_s: float = 1e-3,
+               snaps_in_ram: Optional[int] = None,
+               disk_dir: Optional[str] = None) -> "CheckpointStore":
     """Build a store for ``tier``.  The resilience knobs apply to the
-    spill tier only (the others have no host round-trips to protect):
-    ``fault_plan`` arms the injection hooks inside the callbacks,
-    ``integrity`` turns on per-slot crc32 checksums (required by
-    ``prefetch_checked``), ``max_retries``/``retry_backoff_s`` bound the
-    read retry loop.  ``store.requested_tier`` always records what the
-    caller asked for, even after a ladder degrade upstream."""
+    spill/disk tiers only (the others have no host round-trips to
+    protect): ``fault_plan`` arms the injection hooks inside the
+    callbacks, ``integrity`` turns on per-slot crc32 checksums (required
+    by ``prefetch_checked``), ``max_retries``/``retry_backoff_s`` bound
+    the read retry loop.  ``snaps_in_ram`` caps the RAM-resident slot
+    count of a ``spill`` store (overflow sinks to disk files; the
+    dolfin-adjoint multistage split — ``make_store("disk")`` is the
+    ``snaps_in_ram=0`` corner) and ``disk_dir`` pins the segment files to
+    a caller-owned directory (stale files from dead runs are swept;
+    default is a self-cleaning tempdir).  ``store.requested_tier`` always
+    records what the caller asked for, even after a ladder degrade
+    upstream."""
     if tier in (None, "device"):
         st: CheckpointStore = DeviceStore()
     elif tier == "host":
         st = HostStore()
-    elif tier == "spill":
-        sp = SpillStore()
+    elif tier in ("spill", "disk"):
+        sp = DiskStore() if tier == "disk" else SpillStore()
         sp.fault_plan = fault_plan
         sp.integrity = bool(integrity)
         sp.max_retries = int(max_retries)
         sp.retry_backoff_s = float(retry_backoff_s)
+        if tier == "spill" and snaps_in_ram is not None:
+            sp.snaps_in_ram = int(snaps_in_ram)
+        if disk_dir is not None:
+            sp.set_disk_dir(disk_dir)
         st = sp
     else:
         raise ValueError(f"unknown offload tier {tier!r}; one of {TIERS}")
@@ -413,25 +509,29 @@ class CheckpointStore:
         self._vals = dict(zip(slots, res))
         self._order = list(slots)
 
-    # -- index-addressed (scanned pnode / adaptive ring buffer) ------------
+    # -- index-addressed (scanned writes with a traced index) --------------
     def init_token(self):
         return jnp.zeros((), jnp.float32)
 
     def write_at(self, token, idx, tree: PyTree, keep=None):
         raise NotImplementedError(
             f"offload tier {self.tier!r} does not support scanned "
-            "(traced-index) checkpoint writes; use 'spill'")
+            "(traced-index) checkpoint writes; use 'spill' or 'disk'")
 
     # -- segment-batched (one callback per checkpoint segment) -------------
     def write_batch(self, token, base, tree: PyTree):
         raise NotImplementedError(
             f"offload tier {self.tier!r} does not support segment-batched "
-            "checkpoint writes; use 'spill'")
+            "checkpoint writes; use 'spill' or 'disk'")
 
     def prefetch(self, token, base, seg: int):
         raise NotImplementedError(
             f"offload tier {self.tier!r} does not support segment "
-            "prefetch; use 'spill'")
+            "prefetch; use 'spill' or 'disk'")
+
+    def prefetch_issue(self, token, base, seg: int):
+        """Async-dispatch hook; a no-op on tiers without host I/O."""
+        return token
 
     # -- transfer points ----------------------------------------------------
     def _to_store(self, tree: PyTree) -> PyTree:
@@ -475,13 +575,20 @@ class HostStore(CheckpointStore):
 
 
 class SpillStore(CheckpointStore):
-    """Host-dict spill through token-threaded pure_callback.
+    """Host-side spill through token-threaded pure_callback, with slot
+    payloads split between a RAM dict and disk segment files.
 
     The store object itself is a static (nondiff) argument of the
     ``custom_vjp`` that uses it, so the same instance — and the same host
-    dict — is visible to both the fwd and bwd rules.  Leaf shape/dtype
+    state — is visible to both the fwd and bwd rules.  Leaf shape/dtype
     metadata is recorded at put-trace time (object attributes persist from
     the fwd trace to the bwd trace) so reads know their result shapes.
+
+    ``snaps_in_ram`` governs the RAM/disk routing (see module docstring);
+    all host-side slot state (``_host``, ``_disk`` index, file-slot
+    refcounts, the read cache) is guarded by ``_io_lock`` because the
+    background prefetch executor gathers concurrently with XLA's callback
+    threads.
     """
 
     tier = "spill"
@@ -491,7 +598,7 @@ class SpillStore(CheckpointStore):
         self._host: Dict[Any, List[np.ndarray]] = {}
         self._meta: Dict[Any, Tuple[Any, Tuple[jax.ShapeDtypeStruct, ...]]] = {}
         self._tok = None
-        self.effective_tier = "spill"
+        self.effective_tier = self.tier
         #: per-store callback counters (see module docstring); mutation
         #: holds _STATS_LOCK and mirrors into the _AGG view
         self.stats: Dict[str, int] = {k: 0 for k in _STAT_KEYS}
@@ -511,6 +618,186 @@ class SpillStore(CheckpointStore):
         #: per-slot crc32 over the CLEAN payload, recorded at write time
         #: when ``integrity`` is on (host-side dict like ``_host``)
         self._sums: Dict[int, int] = {}
+        #: RAM/disk split: at most ``snaps_in_ram`` slots in ``_host``
+        #: (None = unlimited — the historical all-RAM store)
+        self.snaps_in_ram: Optional[int] = None
+        self._ram_bytes = 0
+        self._disk_dir: Optional[str] = None
+        self._disk_dir_owned = False
+        self._disk: Dict[int, str] = {}            # slot -> segment file
+        self._file_slots: Dict[str, set] = {}      # file -> live slots
+        self._created: List[str] = []              # files we own (finalizer)
+        self._read_cache: Tuple[Optional[str], Optional[dict]] = (None, None)
+        self._file_seq = itertools.count()
+        self.swept_files = 0
+        #: serializes host-side slot-state access between XLA callback
+        #: threads and the background prefetch executor
+        self._io_lock = threading.RLock()
+        self._exec = None
+        self._inflight: Dict[int, Any] = {}        # chunk base -> Future
+
+    # -- disk backend (host-side; callers hold no lock, these take it) ------
+    def set_disk_dir(self, path: str) -> None:
+        """Pin disk-tier segment files to a caller-owned directory.  Any
+        stale ``repro_spill_*.npz`` left by a dead run is swept (counted
+        in ``self.swept_files``); this store's own files are still removed
+        at GC, but the directory itself is left alone."""
+        os.makedirs(path, exist_ok=True)
+        swept = 0
+        for p in glob.glob(os.path.join(path, _DISK_PREFIX + "*.npz")):
+            try:
+                os.unlink(p)
+                swept += 1
+            except OSError:  # pragma: no cover - races with external rm
+                pass
+        self.swept_files = swept
+        self._disk_dir = path
+        self._disk_dir_owned = False
+        weakref.finalize(self, _cleanup_disk, self._created, path, False)
+
+    def _disk_root(self) -> str:
+        if self._disk_dir is None:
+            self._disk_dir = tempfile.mkdtemp(prefix="repro-spill-")
+            self._disk_dir_owned = True
+            weakref.finalize(self, _cleanup_disk, self._created,
+                             self._disk_dir, True)
+        return self._disk_dir
+
+    def _host_insert(self, slot, leaves) -> None:
+        # under _io_lock
+        old = self._host.get(slot)
+        if old is not None:
+            self._ram_bytes -= sum(a.nbytes for a in old)
+        self._host[slot] = leaves
+        self._ram_bytes += sum(a.nbytes for a in leaves)
+        with _STATS_LOCK:
+            if self._ram_bytes > self.stats["ram_bytes_peak"]:
+                self.stats["ram_bytes_peak"] = self._ram_bytes
+            if self._ram_bytes > _AGG["ram_bytes_peak"]:
+                _AGG["ram_bytes_peak"] = self._ram_bytes
+
+    def _drop_slot(self, slot) -> None:
+        """Remove every copy of ``slot`` (RAM and disk); deletes a segment
+        file once its last live slot is dropped."""
+        with self._io_lock:
+            old = self._host.pop(slot, None)
+            if old is not None:
+                self._ram_bytes -= sum(a.nbytes for a in old)
+            path = self._disk.pop(slot, None)
+            if path is not None:
+                live = self._file_slots.get(path)
+                if live is not None:
+                    live.discard(slot)
+                    if not live:
+                        self._file_slots.pop(path, None)
+                        if self._read_cache[0] == path:
+                            self._read_cache = (None, None)
+                        try:
+                            os.unlink(path)
+                        except OSError:  # pragma: no cover
+                            pass
+
+    def _ram_has_room(self, slots) -> bool:
+        # under _io_lock
+        if self.snaps_in_ram is None:
+            return True
+        projected = len(self._host) + sum(1 for s in slots
+                                          if s not in self._host)
+        return projected <= self.snaps_in_ram
+
+    def _disk_write_rows(self, rows: Dict[int, List[np.ndarray]]) -> int:
+        # under _io_lock; one savez extent per write batch, no pickle
+        path = os.path.join(
+            self._disk_root(),
+            f"{_DISK_PREFIX}{self.store_id}_{next(self._file_seq)}.npz")
+        payload = {f"s{slot}_l{k}": a
+                   for slot, leaves in rows.items()
+                   for k, a in enumerate(leaves)}
+        np.savez(path, **payload)
+        self._created.append(path)
+        self._file_slots[path] = set(rows)
+        for slot in rows:
+            # a rewrite supersedes any prior copy in either medium
+            self._drop_slot(slot)
+            self._disk[slot] = path
+            self._file_slots[path].add(slot)
+        return sum(a.nbytes for leaves in rows.values() for a in leaves)
+
+    def _store_rows(self, rows: Dict[int, List[np.ndarray]]
+                    ) -> Tuple[str, int]:
+        """Route a batch of slots to RAM or disk per ``snaps_in_ram``.
+        Returns ``(medium, disk_bytes)`` for counters/obs."""
+        if not rows:
+            return "ram", 0
+        with self._io_lock:
+            if self._ram_has_room(rows):
+                for slot, leaves in rows.items():
+                    if slot in self._disk:
+                        self._drop_slot(slot)
+                    self._host_insert(slot, leaves)
+                return "ram", 0
+            dbytes = self._disk_write_rows(rows)
+        with _STATS_LOCK:
+            self.stats["disk_write_bytes"] += dbytes
+            _AGG["disk_write_bytes"] += dbytes
+        return "disk", dbytes
+
+    def _disk_read_slot(self, slot):
+        # under _io_lock; one-file cache matches the segment-aligned
+        # access pattern (a prefetch chunk was written as one file)
+        path = self._disk.get(slot)
+        if path is None:
+            return None
+        cpath, cdata = self._read_cache
+        if cpath != path:
+            with np.load(path) as z:
+                cdata = {k: z[k] for k in z.files}
+            self._read_cache = (path, cdata)
+        leaves, k = [], 0
+        while f"s{slot}_l{k}" in cdata:
+            leaves.append(cdata[f"s{slot}_l{k}"])
+            k += 1
+        return leaves or None
+
+    def _slot_read_any(self, slot):
+        """One slot's leaves from whichever medium holds it (None if
+        missing).  Second element reports disk bytes moved."""
+        with self._io_lock:
+            leaves = self._host.get(slot)
+            if leaves is not None:
+                return leaves, 0
+            leaves = self._disk_read_slot(slot)
+            if leaves is None:
+                return None, 0
+            return leaves, sum(a.nbytes for a in leaves)
+
+    def _gather_rows(self, base: int, seg: int):
+        """Host-side bulk read of ``seg`` consecutive slots (missing ->
+        None rows).  Runs on the background executor (via
+        ``prefetch_issue``) or synchronously inside the wait callback —
+        raw I/O only, no fault ticks, so chaos stays deterministic."""
+        rows, dbytes = [], 0
+        with self._io_lock:
+            for i in range(seg):
+                leaves, db = self._slot_read_any(base + i)
+                rows.append(leaves)
+                dbytes += db
+        return rows, dbytes
+
+    def slot_census(self) -> Dict[str, int]:
+        """Live slot counts by medium (tests/benchmarks introspection)."""
+        with self._io_lock:
+            return {"ram": len(self._host), "disk": len(self._disk),
+                    "disk_files": len(self._file_slots)}
+
+    def _ensure_exec(self):
+        if self._exec is None:
+            from concurrent.futures import ThreadPoolExecutor
+            self._exec = ThreadPoolExecutor(
+                max_workers=1,
+                thread_name_prefix=f"spill-prefetch-{self.store_id}")
+            weakref.finalize(self, _shutdown_exec, self._exec)
+        return self._exec
 
     # -- resilience helpers (host-side, called from the callbacks) -----------
     def _tally_counter(self, key: str, n: int = 1) -> None:
@@ -523,11 +810,12 @@ class SpillStore(CheckpointStore):
         ``drop`` loses it in transit (returns None, nothing stored),
         ``corrupt`` returns deterministically flipped bytes.  Checksums
         are recorded over the clean payload BEFORE this runs — the
-        corruption-at-rest model the read-side verify detects."""
+        corruption-at-rest model the read-side verify detects (on the
+        disk tier the flipped bytes land in the segment file)."""
         if spec is None:
             return arrs
         if spec.kind == "drop":
-            self._host.pop(slot, None)
+            self._drop_slot(slot)
             return None
         if spec.kind == "corrupt":
             return self.fault_plan.corrupt_arrays(arrs, salt=slot)
@@ -555,11 +843,10 @@ class SpillStore(CheckpointStore):
             time.sleep(self.retry_backoff_s * (2 ** attempt))
         return False
 
-    def _slot_intact(self, slot: int) -> bool:
-        """Present and (when integrity is on) matching its write-time
+    def _leaves_intact(self, slot: int, leaves) -> bool:
+        """Present and (when integrity is on) matching the write-time
         checksum.  A slot written before integrity was enabled has no
         recorded sum and passes (nothing to verify against)."""
-        leaves = self._host.get(slot)
         if leaves is None:
             return False
         if not self.integrity:
@@ -567,8 +854,13 @@ class SpillStore(CheckpointStore):
         want = self._sums.get(slot)
         return want is None or _crc_leaves(leaves) == want
 
+    def _slot_intact(self, slot: int) -> bool:
+        leaves, _ = self._slot_read_any(slot)
+        return self._leaves_intact(slot, leaves)
+
     # -- counting + obs (host-side, called from the callbacks) --------------
-    def _tally(self, direction: str, *, slots: int, nbytes: int, base):
+    def _tally(self, direction: str, *, slots: int, nbytes: int, base,
+               medium: str = "ram", disk_bytes: int = 0):
         """Bump this store's counters and the aggregate in lockstep (under
         the module lock — see module docstring), then record an obs event
         if a recorder is bound.  Runs on XLA's callback thread."""
@@ -577,15 +869,18 @@ class SpillStore(CheckpointStore):
                 self.stats["free_cb"] += 1
                 _AGG["free_cb"] += 1
             else:
-                for key, n in ((f"{direction}_cb", 1),
-                               (f"{direction}_slots", slots),
-                               (f"{direction}_bytes", nbytes)):
+                keys = [(f"{direction}_cb", 1),
+                        (f"{direction}_slots", slots),
+                        (f"{direction}_bytes", nbytes)]
+                if direction == "read" and disk_bytes:
+                    keys.append(("disk_read_bytes", disk_bytes))
+                for key, n in keys:
                     self.stats[key] += n
                     _AGG[key] += n
         if self._obs is not None:
             self._obs.record(f"spill.{direction}", _runtime=True,
                              store=self.store_id, base=base,
-                             slots=slots, bytes=nbytes)
+                             slots=slots, bytes=nbytes, medium=medium)
 
     # -- host-side callbacks (never traced) ---------------------------------
     def _cb_write(self, token, slot, *leaves):
@@ -596,11 +891,12 @@ class SpillStore(CheckpointStore):
             if self.integrity:
                 self._sums[int(slot)] = _crc_leaves(arrs)
             arrs = self._apply_write_fault(spec, int(slot), arrs)
+            medium = "ram"
             if arrs is not None:
-                self._host[int(slot)] = arrs
+                medium, _ = self._store_rows({int(slot): arrs})
             self._tally("write", slots=1,
                         nbytes=sum(np.asarray(x).nbytes for x in leaves),
-                        base=int(slot))
+                        base=int(slot), medium=medium)
         return np.float32(0)
 
     def _cb_write_if(self, token, slot, keep, *leaves):
@@ -612,11 +908,12 @@ class SpillStore(CheckpointStore):
                 if self.integrity:
                     self._sums[int(slot)] = _crc_leaves(arrs)
                 arrs = self._apply_write_fault(spec, int(slot), arrs)
+                medium = "ram"
                 if arrs is not None:
-                    self._host[int(slot)] = arrs
+                    medium, _ = self._store_rows({int(slot): arrs})
                 self._tally("write", slots=1,
                             nbytes=sum(np.asarray(x).nbytes for x in leaves),
-                            base=int(slot))
+                            base=int(slot), medium=medium)
             else:  # masked out: the round-trip still happened
                 self._tally("write", slots=0, nbytes=0, base=int(slot))
         return np.float32(0)
@@ -630,13 +927,13 @@ class SpillStore(CheckpointStore):
                     raise RuntimeError(
                         f"spill store: read of slot {int(slot)} still "
                         f"failing after {self.max_retries} retries")
-                leaves = self._host.get(int(slot))
+                leaves, dbytes = self._slot_read_any(int(slot))
                 if leaves is None:
                     # a schedule bug or a reordered free — fail loudly
                     # rather than silently contributing zero gradients
                     raise KeyError(f"spill store: slot {int(slot)} read "
                                    "before it was written (or after free)")
-                if not self._slot_intact(int(slot)):
+                if not self._leaves_intact(int(slot), leaves):
                     self._tally_counter("integrity_fail")
                     raise RuntimeError(
                         f"spill store: slot {int(slot)} failed its "
@@ -645,13 +942,15 @@ class SpillStore(CheckpointStore):
                 arrs = tuple(np.asarray(x) for x in leaves)
                 self._tally("read", slots=1,
                             nbytes=sum(a.nbytes for a in arrs),
-                            base=int(slot))
+                            base=int(slot),
+                            medium="disk" if dbytes else "ram",
+                            disk_bytes=dbytes)
                 return (np.float32(0),) + arrs
         return read
 
     def _cb_free(self, token, slot):
         with host_annotation("spill/free"):
-            self._host.pop(int(slot), None)
+            self._drop_slot(int(slot))
             self._tally("free", slots=1, nbytes=0, base=int(slot))
         return np.float32(0)
 
@@ -675,16 +974,40 @@ class SpillStore(CheckpointStore):
             base = int(np.ravel(base)[0])  # broadcast copies are identical
             arrs = [np.asarray(x) for x in stacked]
             sl = (slice(None),) * bnd
+            rows: Dict[int, List[np.ndarray]] = {}
             for i in range(seg):
                 slot_arrs = [a[sl + (i,)].copy() for a in arrs]
                 if self.integrity:
                     self._sums[base + i] = _crc_leaves(slot_arrs)
                 slot_arrs = self._apply_write_fault(spec, base + i, slot_arrs)
                 if slot_arrs is not None:
-                    self._host[base + i] = slot_arrs
+                    rows[base + i] = slot_arrs
+            medium, _ = self._store_rows(rows)
             self._tally("write", slots=seg,
-                        nbytes=sum(a.nbytes for a in arrs), base=base)
+                        nbytes=sum(a.nbytes for a in arrs), base=base,
+                        medium=medium)
         return np.zeros(np.shape(token), np.float32)
+
+    def _cb_dispatch(self, seg, m):
+        """Token-only callback: SUBMIT the gather of ``[base, base+seg)``
+        (in the same slot-aligned chunks the wait will use) to the
+        background executor and return.  Raw I/O only — faults, integrity,
+        and retries stay in the synchronous wait callback."""
+        def dispatch(token, base):
+            with host_annotation("spill/dispatch"):
+                base = int(np.ravel(base)[0])
+                ex = self._ensure_exec()
+                for o in range(0, seg, m):
+                    b = base + o
+                    self._inflight[b] = ex.submit(
+                        self._gather_rows, b, min(m, seg - o))
+                self._tally_counter("dispatch_cb")
+                if self._obs is not None:
+                    self._obs.record("spill.dispatch", _runtime=True,
+                                     store=self.store_id, base=base,
+                                     slots=seg)
+            return np.zeros(np.shape(token), np.float32)
+        return dispatch
 
     def _cb_prefetch(self, seg, checked=False):
         def fetch(token, base):
@@ -702,19 +1025,34 @@ class SpillStore(CheckpointStore):
                             f"failing after {self.max_retries} retries and "
                             "this path has no recompute fallback")
                     ok = False  # checked caller recomputes the segment
+                # consume a background gather staged by prefetch_issue, if
+                # one is in flight for this chunk; fall back to reading
+                # storage synchronously (also on background I/O errors —
+                # the sync path then surfaces them deterministically)
+                rows, dbytes, hit = None, 0, False
+                fut = self._inflight.pop(base, None)
+                if fut is not None:
+                    try:
+                        rows, dbytes = fut.result()
+                        hit = True
+                    except Exception:  # pragma: no cover - backend I/O race
+                        rows = None
+                if rows is None:
+                    rows, dbytes = self._gather_rows(base, seg)
+                if hit:
+                    self._tally_counter("prefetch_hit_cb")
                 out = []
                 for k, s in enumerate(sds):
                     stack = np.zeros(bshape + (seg,) + tuple(s.shape),
                                      s.dtype)
                     if ok:
                         for i in range(seg):
-                            leaves = self._host.get(base + i)
-                            if leaves is not None:  # missing slots -> zeros
-                                stack[sl + (i,)] = leaves[k]
+                            if rows[i] is not None:  # missing slots -> zeros
+                                stack[sl + (i,)] = rows[i][k]
                     out.append(stack)
                 if checked and ok:
                     for i in range(seg):
-                        if not self._slot_intact(base + i):
+                        if not self._leaves_intact(base + i, rows[i]):
                             ok = False
                             self._tally_counter("integrity_fail")
                             if self._obs is not None:
@@ -723,7 +1061,10 @@ class SpillStore(CheckpointStore):
                                     store=self.store_id, slot=base + i,
                                     base=base)
                 self._tally("read", slots=seg,
-                            nbytes=sum(a.nbytes for a in out), base=base)
+                            nbytes=sum(a.nbytes for a in out), base=base,
+                            medium=("disk" if dbytes else "ram") if ok
+                            else "ram",
+                            disk_bytes=dbytes)
                 res = (np.zeros(bshape, np.float32),)
                 if checked:
                     res = res + (np.full(bshape, ok, bool),)
@@ -737,6 +1078,12 @@ class SpillStore(CheckpointStore):
                     for x in leaves)
         self._meta[key] = (treedef, sds)
         return leaves
+
+    def _per_slot_chunk(self, sds, seg: int) -> int:
+        per_slot = max((int(np.prod(s.shape, dtype=np.int64))
+                        * np.dtype(s.dtype).itemsize)
+                       for s in sds) * self.payload_scale if sds else 0
+        return _chunk_slots(seg, per_slot)
 
     # -- slot-addressed ------------------------------------------------------
     def put(self, slot: int, tree: PyTree) -> None:
@@ -792,10 +1139,7 @@ class SpillStore(CheckpointStore):
                     for x in leaves)
         self._meta["idx"] = (treedef, sds)
         seg = int(jnp.shape(leaves[0])[0]) if leaves else 1
-        per_slot = max((int(np.prod(s.shape, dtype=np.int64))
-                        * np.dtype(s.dtype).itemsize)
-                       for s in sds) * self.payload_scale if leaves else 0
-        m = _chunk_slots(seg, per_slot)
+        m = self._per_slot_chunk(sds, seg)
         tok = token
         for o in range(0, seg, m):
             chunk = [x[o:o + m] for x in leaves]
@@ -804,20 +1148,34 @@ class SpillStore(CheckpointStore):
                                     vmap_method="broadcast_all")
         return tok
 
+    def prefetch_issue(self, token, base, seg: int):
+        """Dispatch the host-side gather of slots ``[base, base+seg)``
+        onto the store's background executor: ONE token-only callback that
+        returns as soon as the work is queued, so the read of the next
+        segment overlaps this segment's compute.  The matching
+        ``prefetch``/``prefetch_checked`` at the same base consumes the
+        staged rows.  Ordering rides the usual token chain — issue before
+        wait, frees after the wait (the wait blocks on the background
+        future, so a post-wait free cannot overtake the read)."""
+        if "idx" not in self._meta:
+            return token  # nothing written yet; the wait will read cold
+        _, sds = self._meta["idx"]
+        m = self._per_slot_chunk(sds, seg)
+        return jax.pure_callback(self._cb_dispatch(seg, m), _TOKEN_SDS,
+                                 token, base, vmap_method="broadcast_all")
+
     def prefetch(self, token, base, seg: int):
         """Fetch slots ``[base, base+seg)`` stacked on axis 0 in one
         callback per payload-capped chunk — one total in the common case
         (missing slots read as zeros — the reverse sweeps cond-skip or
-        mask them).  Returns ``(token, tree)``; the fresh
-        token orders any later frees/overwrites after this read, and
-        because the result is an ordinary traced buffer the caller can
-        issue the next segment's prefetch before consuming this one
-        (double buffering)."""
+        mask them).  Returns ``(token, tree)``; the fresh token orders any
+        later frees/overwrites after this read.  When a ``prefetch_issue``
+        for the same base is in flight its staged rows are consumed
+        instead of re-reading storage (``prefetch_hit_cb``) — the
+        double-buffered path; without an issue this is a synchronous
+        read."""
         treedef, sds = self._meta["idx"]
-        per_slot = max((int(np.prod(s.shape, dtype=np.int64))
-                        * np.dtype(s.dtype).itemsize)
-                       for s in sds) * self.payload_scale if sds else 0
-        m = _chunk_slots(seg, per_slot)
+        m = self._per_slot_chunk(sds, seg)
         tok, pieces = token, []
         for o in range(0, seg, m):
             mm = min(m, seg - o)
@@ -845,10 +1203,7 @@ class SpillStore(CheckpointStore):
         fallback rather than consume it.  Chunked exactly like
         ``prefetch``; the chunk verdicts AND together."""
         treedef, sds = self._meta["idx"]
-        per_slot = max((int(np.prod(s.shape, dtype=np.int64))
-                        * np.dtype(s.dtype).itemsize)
-                       for s in sds) * self.payload_scale if sds else 0
-        m = _chunk_slots(seg, per_slot)
+        m = self._per_slot_chunk(sds, seg)
         ok_sds = jax.ShapeDtypeStruct((), jnp.bool_)
         tok, ok, pieces = token, None, []
         for o in range(0, seg, m):
@@ -867,3 +1222,17 @@ class SpillStore(CheckpointStore):
         else:
             stacked = [jnp.concatenate(ps, axis=0) for ps in zip(*pieces)]
         return tok, ok, jtu.tree_unflatten(treedef, stacked)
+
+
+class DiskStore(SpillStore):
+    """All-disk spill: the ``snaps_in_ram=0`` corner of ``SpillStore`` as
+    its own tier, so planners/validators can name it.  Same callbacks,
+    token contract, integrity/retry behavior — slot payloads live in
+    ``repro_spill_*.npz`` segment files instead of the RAM dict."""
+
+    tier = "disk"
+
+    def __init__(self):
+        super().__init__()
+        self.snaps_in_ram = 0
+        self.effective_tier = "disk"

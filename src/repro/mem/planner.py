@@ -12,7 +12,11 @@ For revolve the planner picks the *largest* N_c whose checkpoint set
 budget can never cost more f evaluations (monotonicity; tested).  The spill
 tier is a last resort: it keeps NFE-B at pnode's optimum but pays PCIe/host
 traffic the NFE metric does not see, so it never outranks an in-device
-policy that fits.
+policy that fits.  When the plan DOES offload, separate ``ram_budget`` /
+``disk_budget`` knobs bound the off-device media: the planner solves the
+dolfin-adjoint ``snaps_in_ram`` split (slots over the RAM cap sink to disk
+segment files; ``offload="disk"`` when no slot fits RAM), priced by the
+model's per-tier ``ram_bytes``/``disk_bytes``/``io_seconds`` columns.
 
 Two verify modes:
 
@@ -42,7 +46,7 @@ from repro.core.implicit import is_implicit_method
 from repro.core.tableaus import get_tableau
 from repro.mem.model import (CostEstimate, f_activation_bytes,
                              max_fitting_ncheck, measure_reverse_cost,
-                             policy_cost, tree_bytes)
+                             policy_cost, slot_bytes, tree_bytes)
 
 PyTree = Any
 
@@ -60,6 +64,8 @@ class CandidateDecision:
     chosen: bool
     reason: str
     measured_bytes: Optional[float] = None
+    snaps_in_ram: Optional[int] = None
+    snaps_on_disk: Optional[int] = None
 
     def to_json(self) -> dict:
         return {"policy": self.policy, "ncheck": self.ncheck,
@@ -67,7 +73,9 @@ class CandidateDecision:
                 "predicted_peak_bytes": self.predicted_peak_bytes,
                 "extra_fevals": self.extra_fevals, "chosen": self.chosen,
                 "reason": self.reason,
-                "measured_bytes": self.measured_bytes}
+                "measured_bytes": self.measured_bytes,
+                "snaps_in_ram": self.snaps_in_ram,
+                "snaps_on_disk": self.snaps_on_disk}
 
 
 @dataclass(frozen=True)
@@ -84,6 +92,12 @@ class Plan:
     #: in-device candidate (same order as ``candidates``), plus the spill
     #: fallback row when the walk fell through to it
     report: Tuple[CandidateDecision, ...] = field(default=())
+    #: the solved RAM/disk slot split when the plan offloads under a
+    #: ram_budget: snaps_in_ram slots stay host-RAM-resident, the
+    #: remaining snaps_on_disk sink to segment files (None when the split
+    #: does not apply — no offload, or everything fits in RAM)
+    snaps_in_ram: Optional[int] = None
+    snaps_on_disk: Optional[int] = None
 
     @property
     def extra_fevals(self) -> int:
@@ -143,9 +157,38 @@ def candidate_costs(*, method: str, n_steps: int, state_bytes: int,
     return cands
 
 
+def _spill_split(method: str, n_steps: int, state_bytes: int,
+                 ram_budget: Optional[int], disk_budget: Optional[int]
+                 ) -> Tuple[str, Optional[int], Optional[int], bool, str]:
+    """Solve the dolfin-adjoint RAM/disk slot split for a pnode spill
+    fallback: how many of the n_steps checkpoint slots fit the RAM budget,
+    the rest sink to disk.  Returns (offload, snaps_in_ram, snaps_on_disk,
+    disk_fits, note) — offload='disk' is the snaps_in_ram=0 corner, a None
+    split means everything stays in RAM."""
+    if ram_budget is None:
+        return "spill", None, None, True, "no ram_budget — all slots in RAM"
+    sb = max(1, slot_bytes(method, state_bytes))
+    k = int(ram_budget) // sb
+    if k >= n_steps:
+        return ("spill", None, None, True,
+                f"ram_budget fits all {n_steps} slots "
+                f"({sb} B/slot) — no disk split needed")
+    on_disk = n_steps - k
+    disk_fits = disk_budget is None or on_disk * sb <= int(disk_budget)
+    note = (f"ram_budget fits {k}/{n_steps} slots ({sb} B/slot) — "
+            f"{on_disk} slots sink to disk"
+            + ("" if disk_fits else
+               f"; disk_budget exceeded ({on_disk * sb} B needed)"))
+    if k == 0:
+        return "disk", None, on_disk, disk_fits, note
+    return "spill", k, on_disk, disk_fits, note
+
+
 def plan_odeint(f: Callable, u0: PyTree, theta: PyTree, *, dt: float,
                 n_steps: int, t0: float = 0.0, method: str = "rk4",
                 mem_budget: Optional[int] = None,
+                ram_budget: Optional[int] = None,
+                disk_budget: Optional[int] = None,
                 verify: str = "measure",
                 loss_fn: Optional[Callable] = None,
                 solver_opts: Optional[dict] = None,
@@ -172,7 +215,40 @@ def plan_odeint(f: Callable, u0: PyTree, theta: PyTree, *, dt: float,
     solver configuration here.  The same budget walk and spill fallback
     apply — the candidate set is just the implicit one (see
     ``candidate_costs``).
+
+    ``ram_budget``/``disk_budget`` (bytes) bound the OFF-device media when
+    the plan offloads: the planner solves the dolfin-adjoint
+    ``snaps_in_ram`` split (``Plan.snaps_in_ram``/``snaps_on_disk``) so at
+    most ram_budget bytes of checkpoint slots stay host-RAM-resident and
+    the overflow sinks to disk segment files — ``offload="disk"`` when
+    the RAM budget fits no slot at all.  With ``ram_budget`` alone (no
+    ``mem_budget``) the plan is the long-trajectory shape directly: pnode
+    + spill/disk offload under the RAM cap, no device-budget walk.  A
+    disk_budget the overflow exceeds marks the plan ``fits=False`` (best
+    effort), mirroring the device-budget semantics.
     """
+    state_bytes_ = tree_bytes(u0)
+    if mem_budget is None and ram_budget is not None:
+        # RAM-bounded offload without a device budget: the ROADMAP
+        # long-trajectory shape — keep pnode's zero-recompute optimum,
+        # move every checkpoint slot off device, split RAM/disk by budget
+        off, in_ram, on_disk, disk_fits, note = _spill_split(
+            method, n_steps, state_bytes_, ram_budget, disk_budget)
+        est = policy_cost("pnode", method=method, n_steps=n_steps,
+                          state_bytes=state_bytes_,
+                          theta_bytes=tree_bytes(theta), offload=off,
+                          snaps_in_ram=0 if off == "disk" else in_ram,
+                          **_solver_kw(solver_opts))
+        report = ()
+        if explain:
+            report = (CandidateDecision(
+                "pnode", None, off, int(est.peak_bytes),
+                int(est.extra_fevals), True,
+                f"chosen: ram_budget without mem_budget — pnode + {off} "
+                f"offload; {note}", None, in_ram, on_disk),)
+        return Plan("pnode", None, off, est, None, disk_fits,
+                    report=report, snaps_in_ram=in_ram,
+                    snaps_on_disk=on_disk)
     if mem_budget is None:
         # no constraint: the paper's method — no recompute beyond the
         # per-stage linearizations, bounded graph depth
@@ -268,32 +344,39 @@ def plan_odeint(f: Callable, u0: PyTree, theta: PyTree, *, dt: float,
                     measured, tuple(cands), _report())
 
     # nothing fits on device: keep pnode's optimal NFE-B and move the
-    # checkpoint storage off device through the spill store
+    # checkpoint storage off device through the spill store, split across
+    # RAM and disk by the off-device budgets
+    off, in_ram, on_disk, disk_fits, note = _spill_split(
+        method, n_steps, state_bytes, ram_budget, disk_budget)
     est = policy_cost("pnode", method=method, n_steps=n_steps,
                       state_bytes=state_bytes, theta_bytes=theta_bytes,
-                      f_act_bytes=fa, offload="spill",
+                      f_act_bytes=fa, offload=off,
+                      snaps_in_ram=0 if off == "disk" else in_ram,
                       **_solver_kw(solver_opts))
     measured = None
     fits = est.peak_bytes <= mem_budget
     if verify == "measure":
         measured = measure_reverse_cost(
             f, u0, theta, dt=dt, n_steps=n_steps, t0=t0, method=method,
-            policy="pnode", offload="spill", loss_fn=loss_fn,
+            policy="pnode", offload=off, loss_fn=loss_fn,
             solver_opts=solver_opts)["hlo_peak_bytes"]
         fits = measured <= mem_budget
+    fits = fits and disk_fits
     spill_dec = None
     if explain:
         spill_dec = CandidateDecision(
-            "pnode", None, "spill", int(est.peak_bytes),
+            "pnode", None, off, int(est.peak_bytes),
             int(est.extra_fevals), True,
             "chosen: fallback — no in-device candidate fits; spill keeps "
-            "NFE-B at pnode's optimum and moves checkpoint storage to host"
+            "NFE-B at pnode's optimum and moves checkpoint storage off "
+            f"device ({note})"
             + ("" if fits else
-               " (best effort: even the spill working set exceeds the "
-               "budget)"),
-            measured)
-    return Plan("pnode", None, "spill", est, mem_budget, fits, measured,
-                tuple(cands), _report(spill_dec))
+               " (best effort: the working set or the disk overflow "
+               "exceeds its budget)"),
+            measured, in_ram, on_disk)
+    return Plan("pnode", None, off, est, mem_budget, fits, measured,
+                tuple(cands), _report(spill_dec), snaps_in_ram=in_ram,
+                snaps_on_disk=on_disk)
 
 
 # ---------------------------------------------------------------------------

@@ -154,20 +154,35 @@ class FlightRecorder:
 
     def spill_traffic(self) -> Dict[str, Dict[str, Any]]:
         """Per-store, per-direction spill I/O: callbacks, slots, and payload
-        bytes, plus the per-segment breakdown keyed by slot base."""
+        bytes, plus the per-segment breakdown keyed by slot base and the
+        per-MEDIUM byte split (``media``: "ram" vs "disk" — the multi-tier
+        store tags every write/read event with where the payload landed).
+        ``dispatch_cb`` counts the token-only async prefetch dispatches
+        (``spill.dispatch`` events) separately from data-carrying reads."""
         out: Dict[str, Dict[str, Any]] = {}
         for e in self.events():
-            if e.kind not in ("spill.write", "spill.read", "spill.free"):
+            if e.kind not in ("spill.write", "spill.read", "spill.free",
+                              "spill.dispatch"):
                 continue
             store = e.data.get("store", "?")
             s = out.setdefault(store, {
-                "write_cb": 0, "read_cb": 0, "free_cb": 0,
+                "write_cb": 0, "read_cb": 0, "free_cb": 0, "dispatch_cb": 0,
                 "write_slots": 0, "read_slots": 0,
                 "write_bytes": 0, "read_bytes": 0,
-                "segments": {}})
+                "segments": {}, "media": {}})
+            if e.kind == "spill.dispatch":
+                s["dispatch_cb"] += 1
+                continue
             if e.kind == "spill.free":
                 s["free_cb"] += 1
                 continue
+            medium = e.data.get("medium")
+            if medium is not None:
+                m = s["media"].setdefault(str(medium), {
+                    "write_bytes": 0, "read_bytes": 0})
+                key = ("write_bytes" if e.kind == "spill.write"
+                       else "read_bytes")
+                m[key] += int(e.data.get("bytes", 0))
             d = "write" if e.kind == "spill.write" else "read"
             s[f"{d}_cb"] += 1
             s[f"{d}_slots"] += int(e.data.get("slots", 1))

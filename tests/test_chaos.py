@@ -139,12 +139,20 @@ def test_spill_read_flake_persistent_raises():
 
 def test_effective_tier_ladder():
     assert effective_tier("spill", None) == "spill"
+    # spill outage lands on the file-backed disk tier first (same
+    # callback protocol, scanned-capable), host/device only after it
     down = FaultPlan([FaultSpec("tier.spill", 0, "down")])
-    assert effective_tier("spill", down) == "host"
-    assert effective_tier("spill", down, scanned=True) == "device"
-    both = FaultPlan([FaultSpec("tier.spill", 0, "down"),
-                      FaultSpec("tier.host", 0, "down")])
-    assert effective_tier("spill", both) == "device"
+    assert effective_tier("spill", down) == "disk"
+    assert effective_tier("spill", down, scanned=True) == "disk"
+    spill_disk = FaultPlan([FaultSpec("tier.spill", 0, "down"),
+                            FaultSpec("tier.disk", 0, "down")])
+    assert effective_tier("spill", spill_disk) == "host"
+    # the scanned sweeps cannot use the slot-addressed host tier
+    assert effective_tier("spill", spill_disk, scanned=True) == "device"
+    all_down = FaultPlan([FaultSpec("tier.spill", 0, "down"),
+                          FaultSpec("tier.disk", 0, "down"),
+                          FaultSpec("tier.host", 0, "down")])
+    assert effective_tier("spill", all_down) == "device"
 
 
 def test_tier_degrade_revolve_bitwise():

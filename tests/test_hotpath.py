@@ -262,6 +262,7 @@ def test_adaptive_reverse_reads_only_accepted_prefix():
     uf, info = odeint_adaptive(f, u0, th, t0=0.0, t1=0.6, rtol=1e-6,
                                atol=1e-6, max_steps=max_steps)
     n_acc = int(info.n_accepted)
+    n_att = n_acc + int(info.n_rejected)
     assert 0 < n_acc < max_steps // 2  # the tail actually exists
 
     def loss(u0_, th_):
@@ -277,9 +278,12 @@ def test_adaptive_reverse_reads_only_accepted_prefix():
     st = spill_stats()
     assert st["read_cb"] <= math.ceil(n_acc / seg) + 1, (st, n_acc)
     assert st["read_slots"] <= n_acc + 2 * seg, (st, n_acc)
-    # forward wrote one callback per attempted step (while_loop: cannot
-    # batch a data-dependent accept), but only accepted slots were kept
-    assert st["write_slots"] == n_acc, st
+    # the forward staging ring flushes once per FULL segment of accepted
+    # steps plus one trailing partial flush — O(n/seg) callbacks, never
+    # one per attempted step (the pre-PR-9 O(N) path)
+    assert st["write_cb"] <= math.ceil(n_att / seg) + 1, (st, n_att)
+    # flushes ship whole rings: accepted slots rounded up to the segment
+    assert st["write_slots"] == math.ceil(n_acc / seg) * seg, (st, n_acc)
 
 
 def test_adaptive_gradient_still_correct_vs_fd():
