@@ -5,14 +5,15 @@
   PYTHONPATH=src python -m benchmarks.run --smoke    # CI: mem_plan +
                                                     # hotpath +
                                                     # stiff_ensemble +
-                                                    # chaos + longhaul;
+                                                    # chaos + longhaul
+                                                    # + serve_load;
                                                     # writes
-                                                    # BENCH_2/3/4/5/6
+                                                    # BENCH_2/3/4/5/6/7
                                                     # .json, fails on
                                                     # host-callback,
                                                     # NFE-B, fault-
-                                                    # recovery, or
-                                                    # multi-tier
+                                                    # recovery, multi-
+                                                    # tier, or serving
                                                     # regressions
 """
 from __future__ import annotations
@@ -26,7 +27,7 @@ def main() -> None:
 
     if "--smoke" in sys.argv:
         from benchmarks import (chaos, hotpath, longhaul, mem_plan,
-                                stiff_ensemble)
+                                serve_load, stiff_ensemble)
         from repro.obs import DEFAULT_REGISTRY, MetricsSink
         t0 = time.time()
         # METRICS.jsonl: per-section structured records + the unified
@@ -88,6 +89,17 @@ def main() -> None:
                 bitwise_disk=rec6["bitwise"]["disk"],
                 bitwise_split=rec6["bitwise"]["split"],
                 bitwise_disk_vs_host=rec6["bitwise"]["disk_vs_host"])
+            t5 = time.time()
+            rec7 = serve_load.main(smoke=True, check=True)
+            sink.emit(
+                "bench.section", section="serve_load",
+                elapsed_s=time.time() - t5,
+                requests_per_s=rec7["load"]["requests_per_s"],
+                latency_p50_s=rec7["load"]["latency_p50_s"],
+                latency_p99_s=rec7["load"]["latency_p99_s"],
+                batch_occupancy_mean=rec7["load"]["batch_occupancy_mean"],
+                callbacks_per_request=rec7["load"]["callbacks_per_request"],
+                census_empty=rec7["load"]["census_empty"])
             sink.emit("bench.gates",
                       **{k: v for k, v in
                          DEFAULT_REGISTRY.snapshot()["counters"].items()
@@ -97,8 +109,8 @@ def main() -> None:
 
     from benchmarks import (adjoint_discrepancy, chaos, cnf_tables,
                             fig3_memory, hotpath, longhaul, mem_plan,
-                            roofline, stiff_ensemble, stiff_table8,
-                            table2_costs)
+                            roofline, serve_load, stiff_ensemble,
+                            stiff_table8, table2_costs)
 
     sections = [
         ("adjoint_discrepancy (Table 1 / Prop 1)",
@@ -115,6 +127,8 @@ def main() -> None:
         ("chaos (fault injection + recovery / BENCH_5.json)", chaos.main),
         ("longhaul (multi-tier long-horizon / BENCH_6.json)",
          longhaul.main),
+        ("serve_load (continuous-batching serve / BENCH_7.json)",
+         serve_load.main),
         ("roofline (EXPERIMENTS Roofline)", roofline.main),
     ]
 

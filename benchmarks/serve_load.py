@@ -1,0 +1,200 @@
+"""Serving load benchmark (BENCH_7): open-loop request stream against the
+``repro.serve`` ODE engine — the paper workload (CNF log-density and
+score over a concatsquash field) as a service, reverse passes running
+through the lane-keyed spill store.
+
+Open-loop means arrivals do NOT wait for completions: ``arrive_per_step``
+fresh requests join the queue before every scheduling quantum regardless
+of how the engine is doing, so queueing delay shows up in the latency
+tail instead of being hidden by a closed feedback loop.  The arrival
+schedule is deterministic (tick-based, seeded payloads) — wall-clock
+numbers vary with the host, the *counts* (callbacks per request, batch
+occupancy, census) do not, and only count-like quantities are gated.
+
+Reported (BENCH_7.json, gated vs ``bench7_baseline.json`` through the
+unified ``repro.obs.baseline`` checker):
+
+  requests/sec           completed requests over the measured wall
+  p50/p99 latency        submit→resolve wall seconds (and the
+                         deterministic tick-latency alongside)
+  batch occupancy        mean real-lanes/bucket over every served batch
+  callbacks-per-request  spill-store host round-trips (write + read +
+                         dispatch + prefetch-hit) per completed request
+  census                 every store empty after the drain (departures
+                         freed their slots)
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.mem.offload import reset_spill_stats, spill_stats
+from repro.models.ode_nets import cnf_vf, cnf_vf_init
+from repro.obs import (DEFAULT_REGISTRY, BaselineRef, Gate, MetricsRegistry,
+                       check_against_baseline as _obs_check)
+from repro.serve import BucketSpec, ODEEngine
+
+BASELINE_PATH = Path(__file__).resolve().parent / "bench7_baseline.json"
+
+DIM = 4
+
+
+def _percentile(xs, q: float) -> float:
+    if not xs:
+        return 0.0
+    return float(np.percentile(np.asarray(xs, np.float64), q))
+
+
+def bench_load(n_requests: int, arrive_per_step: int, n_steps: int,
+               segment: int, snaps_in_ram: int, score_every: int = 3,
+               seed: int = 0) -> dict:
+    """Drive ``n_requests`` through the engine open-loop; every
+    ``score_every``-th request is a score (reverse-pass) request, the rest
+    are forward densities — so the spill store sees a realistic mixed
+    read/write stream while forward traffic stays checkpoint-free."""
+    theta = cnf_vf_init(jax.random.PRNGKey(seed), DIM, hidden=(16, 16))
+    registry = MetricsRegistry()
+    engine = ODEEngine(cnf_vf, theta, dim=DIM, dt=0.05, n_steps=n_steps,
+                       method="rk4", offload="spill",
+                       offload_segment=segment, snaps_in_ram=snaps_in_ram,
+                       buckets=BucketSpec((1, 2, 4, 8)),
+                       registry=registry)
+    engine.warmup()  # compiles happen outside the measured window
+    rng = np.random.default_rng(seed)
+    payloads = rng.normal(size=(n_requests, DIM)).astype(np.float32)
+
+    reset_spill_stats()
+    pending: list = []
+    lat_s: list = []
+    lat_ticks: list = []
+    submitted = 0
+    quanta = 0
+    t_start = time.perf_counter()
+    while submitted < n_requests or pending:
+        # open-loop arrivals: a fixed number per quantum, never gated on
+        # completions
+        for _ in range(arrive_per_step):
+            if submitted >= n_requests:
+                break
+            kind = "score" if submitted % score_every == 0 else "density"
+            tk = engine.submit(kind, payloads[submitted])
+            pending.append((tk, time.perf_counter()))
+            submitted += 1
+        engine.step()
+        quanta += 1
+        now = time.perf_counter()
+        still = []
+        for tk, ts in pending:
+            if tk.done():
+                lat_s.append(now - ts)
+                lat_ticks.append(tk.latency_ticks)
+            else:
+                still.append((tk, ts))
+        pending = still
+        if quanta > 100 * n_requests:
+            raise RuntimeError("serve_load failed to drain")
+    wall = time.perf_counter() - t_start
+
+    st = spill_stats()
+    cbs = (st["write_cb"] + st["read_cb"] + st["dispatch_cb"]
+           + st["prefetch_hit_cb"])
+    occ = registry.histogram("serve.batch_occupancy") or {}
+    census = engine.slot_census()
+    rec = {
+        "n_requests": n_requests,
+        "arrive_per_step": arrive_per_step,
+        "n_steps": n_steps, "segment": segment,
+        "snaps_in_ram": snaps_in_ram,
+        "completed": registry.counter("serve.completed"),
+        "errors": registry.counter("serve.errors"),
+        "wall_s": wall,
+        "requests_per_s": n_requests / max(wall, 1e-9),
+        "latency_p50_s": _percentile(lat_s, 50),
+        "latency_p99_s": _percentile(lat_s, 99),
+        "latency_p50_ticks": _percentile(lat_ticks, 50),
+        "latency_p99_ticks": _percentile(lat_ticks, 99),
+        "batch_occupancy_mean": (occ.get("sum", 0.0)
+                                 / max(occ.get("count", 0), 1)),
+        "callbacks_total": cbs,
+        "callbacks_per_request": cbs / n_requests,
+        "write_cb": st["write_cb"], "read_cb": st["read_cb"],
+        "dispatch_cb": st["dispatch_cb"],
+        "prefetch_hit_cb": st["prefetch_hit_cb"],
+        "census_after_drain": census,
+        "census_empty": not any(census.values()),
+    }
+    print(f"load: {n_requests} reqs in {wall:.2f}s "
+          f"({rec['requests_per_s']:.1f} req/s), "
+          f"p50 {rec['latency_p50_s']*1e3:.1f} ms / "
+          f"p99 {rec['latency_p99_s']*1e3:.1f} ms, "
+          f"occupancy {rec['batch_occupancy_mean']:.2f}, "
+          f"{rec['callbacks_per_request']:.1f} cb/req, "
+          f"census empty: {rec['census_empty']}")
+    return rec
+
+
+#: BENCH_7 regression gates.  Wall-clock metrics (req/s, latency) are
+#: recorded but NOT gated — CI hosts vary; the gates hold the
+#: deterministic invariants: every request completes, callbacks per
+#: request stay at the recorded O(n_steps/segment) level, batching
+#: actually happens, and the stores drain empty.
+GATES = [
+    Gate("smoke_config", "load.n_requests", "==",
+         BaselineRef("smoke_n_requests"), precondition=True,
+         message="callback counts scale with request count; the baseline "
+                 "is recorded for the --smoke configuration — re-run "
+                 "with --smoke to compare against it"),
+    Gate("all_completed", "load.completed", "==",
+         BaselineRef("smoke_n_requests"),
+         message="not every admitted request completed"),
+    Gate("no_errors", "load.errors", "==", 0,
+         message="fault-free load run produced request errors"),
+    Gate("callbacks_bounded", "load.callbacks_total", "<=",
+         BaselineRef("callbacks_total_max"),
+         message="spill callbacks per request regressed past the "
+                 "recorded bound (lane-keyed batching is degrading)"),
+    Gate("occupancy", "load.batch_occupancy_mean", ">=",
+         BaselineRef("occupancy_min"),
+         message="mean batch occupancy fell below the recorded floor — "
+                 "the scheduler stopped batching"),
+    Gate("census_empty", "load.census_empty", "truthy",
+         message="stores not empty after drain: departing requests are "
+                 "leaking checkpoint slots"),
+]
+
+
+def check_against_baseline(record: dict) -> list[str]:
+    return _obs_check(record, GATES, BASELINE_PATH, bench="serve_load",
+                      registry=DEFAULT_REGISTRY)
+
+
+def main(smoke: bool = False, out_path: str = "BENCH_7.json",
+         check: bool = False) -> dict:
+    if smoke:
+        cfg = dict(n_requests=24, arrive_per_step=3, n_steps=16,
+                   segment=4, snaps_in_ram=8)
+    else:
+        cfg = dict(n_requests=200, arrive_per_step=4, n_steps=64,
+                   segment=8, snaps_in_ram=32)
+    print("== serve_load: open-loop CNF density/score service ==")
+    load = bench_load(**cfg)
+    record = {"bench": "serve_load", "smoke": smoke, "load": load}
+    Path(out_path).write_text(json.dumps(record, indent=2))
+    print(f"[serve_load] wrote {out_path}")
+    if check:
+        errs = check_against_baseline(record)
+        for e in errs:
+            print(f"[serve_load] BASELINE REGRESSION: {e}")
+        if errs:
+            raise SystemExit(1)
+        print("[serve_load] serve gates within baseline")
+    return record
+
+
+if __name__ == "__main__":
+    import sys
+    main(smoke="--smoke" in sys.argv, check="--check" in sys.argv)

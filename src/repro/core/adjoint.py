@@ -116,9 +116,14 @@ _FUSED_POLICIES = ("pnode", "pnode2", "revolve", "revolve2")
 
 
 def _reject_vmap_offload(u0: PyTree, theta: PyTree, where: str) -> None:
-    """vmap-of-odeint-with-offload fails deep inside the callback machinery
-    with an opaque trace error (or, worse, aliases host-dict slots and
-    returns wrong gradients); detect it up front (satellite task).
+    """vmap over a SLOT-ADDRESSED offload path fails deep inside the
+    callback machinery with an opaque trace error (or, worse, aliases
+    host-dict slots and returns wrong gradients); detect it up front.
+    Only the trace-time slot-addressed paths (revolve/revolve2, and the
+    host tier they imply) still reject: the scanned pnode spill/disk path
+    composes with vmap — its segment-batched callbacks broadcast the
+    mapped axes and each slot stores the full batch block (see the vmap
+    notes in ``repro.mem.offload``).
 
     Leaves may be BatchTracers directly (vmap(odeint)) or wrap one deeper
     in the tracer stack (vmap(grad(...)): JVPTracers whose primals are
@@ -142,12 +147,14 @@ def _reject_vmap_offload(u0: PyTree, theta: PyTree, where: str) -> None:
 
     if any(has_batch_tracer(x) for x in jtu.tree_leaves((u0, theta))):
         raise NotImplementedError(
-            f"vmap over {where} with an offload store is not supported: "
-            "the store's host-side dict sees one logical slot index for "
-            "the entire batch, so per-example checkpoints would alias. "
-            "Workaround: offload='device' (checkpoints ride the residual "
-            "pytree, which vmap understands) — or fold the mapped axis "
-            "into u0's leading batch dimension instead of vmapping.")
+            f"vmap over {where} with a slot-addressed offload store is not "
+            "supported: the store's host-side dict sees one logical slot "
+            "index for the entire batch, so per-example checkpoints would "
+            "alias.  Workarounds: adjoint='pnode' with offload='spill'/"
+            "'disk' (the scanned segment-batched path composes with vmap), "
+            "offload='device' (checkpoints ride the residual pytree, which "
+            "vmap understands), or fold the mapped axis into u0's leading "
+            "batch dimension instead of vmapping.")
 
 
 def odeint(f: VectorField, u0: PyTree, theta: PyTree, *, dt: float,
@@ -156,6 +163,7 @@ def odeint(f: VectorField, u0: PyTree, theta: PyTree, *, dt: float,
            offload: str | None = None, offload_segment: int | None = None,
            snaps_in_ram: int | None = None,
            offload_dir: str | None = None,
+           offload_store=None,
            mem_budget: int | None = None,
            ram_budget: int | None = None,
            disk_budget: int | None = None,
@@ -179,7 +187,14 @@ def odeint(f: VectorField, u0: PyTree, theta: PyTree, *, dt: float,
     the dolfin-adjoint multistage split, applying to scanned pnode
     segments and revolve slots alike); ``offload_dir`` pins the disk
     tier's segment files to a caller-owned directory (stale files swept
-    on store init).  With ``adjoint="auto"``, ``ram_budget``/
+    on store init).  ``offload_store`` (advanced; scanned pnode
+    spill/disk only) supplies a caller-OWNED ``SpillStore``/``DiskStore``
+    instead of the per-call store ``odeint`` would build: the serving
+    engine uses this to key checkpoint slots per request
+    (``store.lane_keys``) and free them as requests leave the batch
+    (``store.free_request``) — the caller then owns the store's lifetime
+    and must not share it between concurrently traced solves.  With
+    ``adjoint="auto"``, ``ram_budget``/
     ``disk_budget`` bound the spill fallback's RAM and disk footprints
     (the planner solves the ``snaps_in_ram`` split; see
     ``repro.mem.planner``).
@@ -279,7 +294,20 @@ def odeint(f: VectorField, u0: PyTree, theta: PyTree, *, dt: float,
         raise ValueError(
             "offload_dir pins the disk tier's segment files "
             f"(offload='spill'/'disk'); got offload={offload!r}")
-    if offloaded:
+    if offload_store is not None and not (
+            adjoint == "pnode" and offload in ("spill", "disk")):
+        raise ValueError(
+            "offload_store supplies a caller-owned store to the scanned "
+            "pnode spill/disk path only (adjoint='pnode', "
+            f"offload='spill'/'disk'); got adjoint={adjoint!r}, "
+            f"offload={offload!r}")
+    if offloaded and (adjoint in ("revolve", "revolve2")
+                      or offload == "host"):
+        # slot-addressed stores see one logical slot for the whole batch —
+        # vmap would alias per-example checkpoints.  The scanned pnode
+        # spill/disk path below composes with vmap: its segment-batched
+        # callbacks broadcast the mapped axes, so each slot stores the
+        # full batch block (or per-lane keyed rows under lane_keys).
         _reject_vmap_offload(u0, theta, "odeint")
     if obs is not None:
         obs.record("odeint.solve", method=method, adjoint=adjoint,
@@ -306,13 +334,26 @@ def odeint(f: VectorField, u0: PyTree, theta: PyTree, *, dt: float,
                 "offload='host' applies to trace-time checkpoint sites "
                 "(revolve/revolve2); the scanned pnode sweep offloads "
                 "through offload='spill' or 'disk'")
-        from repro.mem.offload import default_segment, make_store
+        from repro.mem.offload import (batch_scale, default_segment,
+                                       make_store)
         segment = (offload_segment if offload_segment is not None
                    else default_segment(n_steps))
-        store = make_store(offload, snaps_in_ram=snaps_in_ram,
-                           disk_dir=offload_dir)
+        if offload_store is not None:
+            store = offload_store
+            if getattr(store, "tier", None) not in ("spill", "disk"):
+                raise ValueError(
+                    "offload_store must be a spill/disk-tier store "
+                    f"(make_store('spill'|'disk')); got "
+                    f"{type(store).__name__}")
+        else:
+            store = make_store(offload, snaps_in_ram=snaps_in_ram,
+                               disk_dir=offload_dir)
         if obs is not None:
             store.bind_obs(obs)
+        # mapped axes are only visible HERE (as BatchTracers on the args);
+        # the custom_vjp fwd is retraced at logical shapes, so the store's
+        # payload-cap chunking needs the batch factor handed to it
+        store.payload_scale = batch_scale((u0, theta))
         return _odeint_pnode_spill(f, method, float(t0), float(dt), n_steps,
                                    store, min(segment, n_steps),
                                    fused, u0, theta)

@@ -54,6 +54,15 @@ Sites currently consumed (see the subsystem modules for semantics):
   ``tier.<name>``   consulted statically by ``mem.offload.effective_tier``;
                     kind ``down`` marks the tier unavailable so the store
                     factory walks the degradation ladder.
+  ``serve.request`` host, per ``repro.serve`` queue admission; kinds
+                    ``malformed`` / ``oversize`` (force the same
+                    ``AdmissionError`` rejection path a genuinely bad
+                    request takes — the request never occupies a lane).
+  ``serve.decode``  host, per engine batch (ODE path) or decode step (LM
+                    path); kind ``nan`` poisons exactly ONE lane's result,
+                    resolving that request's ticket with an error while
+                    its batch-mates stay bitwise-correct (batch isolation;
+                    tested in tests/test_chaos.py).
 """
 from __future__ import annotations
 

@@ -1,8 +1,25 @@
-"""Batched serving driver: prefill a batch of prompts, then decode tokens
-autoregressively with the KV-cache/recurrent decode state.
+"""Serving driver: a thin front over ``repro.serve.LMEngine``.
 
   PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-7b \
-      --batch 4 --prompt-len 64 --gen 32
+      --batch 4 --prompt-len 64 --gen 32 --replicas 2
+
+The engine owns admission, wave scheduling, prefill/decode interleaving
+and the per-call timing log; this driver builds synthetic prompts,
+submits them, and turns the engine's ``call_log`` into the ``serve.done``
+record.  Accounting (fixed here, previously wrong in two ways): the first
+sampled token — produced by prefill — counts toward throughput, and the
+first decode call's compile time is reported as *warm-up* instead of
+being lumped into the steady-state rate:
+
+  ``warmup_s``          prefill wall + the first (compiling) decode call
+  ``steady_s``          every later decode call
+  ``tok_per_s_steady``  tokens emitted by post-warm-up decode calls / steady_s
+  ``tok_per_s``         ALL tokens (batch * gen, first token included) over
+                        the end-to-end wall — the honest user-facing rate
+
+``--replicas N`` runs N model replicas (one ``LMEngine`` each, lanes
+split across them, decode state sharded per ``repro.dist``
+decode-state specs) and aggregates their stats.
 
 Reduced configs on host devices by default (CPU-runnable); the full-config
 production path is exercised shape-only by launch/dryrun.py decode cells.
@@ -10,81 +27,86 @@ production path is exercised shape-only by launch/dryrun.py decode cells.
 from __future__ import annotations
 
 import argparse
-import time
 
-import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ShapeCell, reduced
 from repro.configs.registry import get_arch
 from repro.data.pipeline import SyntheticLM
-from repro.dist import sharding as shd
 from repro.launch.mesh import make_host_mesh
-from repro.launch.steps import make_decode_step, make_prefill_step
-from repro.models import lm
 from repro.obs import MetricsSink, StructuredLogger
+from repro.serve import LMEngine
+
+
+def _stats_from_log(call_log, tokens_total: int) -> dict:
+    """Warm-up / steady-state split of an engine ``call_log``."""
+    prefill_s = sum(c["wall_s"] for c in call_log if c["op"] == "prefill")
+    decode = [c for c in call_log if c["op"] == "decode"]
+    decode_s = sum(c["wall_s"] for c in decode)
+    warm = [c for c in decode if c.get("compile")]
+    steady = [c for c in decode if not c.get("compile")]
+    warmup_s = prefill_s + sum(c["wall_s"] for c in warm)
+    steady_s = sum(c["wall_s"] for c in steady)
+    steady_tok = sum(c["tokens"] for c in steady)
+    total_s = prefill_s + decode_s
+    return {
+        "prefill_s": prefill_s,
+        "decode_s": decode_s,
+        "warmup_s": warmup_s,
+        "steady_s": steady_s,
+        "tokens": tokens_total,
+        "tok_per_s": tokens_total / max(total_s, 1e-9),
+        "tok_per_s_steady": steady_tok / max(steady_s, 1e-9),
+    }
 
 
 def serve(cfg, *, batch: int, prompt_len: int, gen: int, mesh=None,
           temperature: float = 0.0, seed: int = 0, log_fn=print,
-          sink: MetricsSink | None = None):
-    """Prefill + greedy/temperature decode.  Returns (tokens, stats).
+          sink: MetricsSink | None = None, replicas: int = 1,
+          decode_slice: int = 8):
+    """Prefill + greedy/temperature decode through the serve engine.
+    Returns (tokens ``(batch, gen)``, stats).
 
-    ``sink`` receives a structured ``serve.done`` record (prefill/decode
-    wall time, tokens/s) alongside the human line through ``log_fn``."""
+    ``sink`` receives a structured ``serve.done`` record (warm-up and
+    steady-state split out — see module docstring) alongside the human
+    line through ``log_fn``."""
+    replicas = max(1, int(replicas))
+    if batch % replicas != 0:
+        raise ValueError(f"batch {batch} must divide evenly over "
+                         f"{replicas} replicas")
+    lanes = batch // replicas
     mesh = mesh or make_host_mesh()
-    max_seq = prompt_len + gen
     cell = ShapeCell("serve", prompt_len, batch, "prefill")
     pipe = SyntheticLM(cfg, cell, seed=seed)
+    prompt = {k: np.asarray(v) for k, v in
+              pipe.batch(jnp.zeros((), jnp.int32)).items()
+              if k != "targets"}
+    extras_keys = [k for k in prompt if k != "tokens"]
 
-    with mesh:
-        params = jax.jit(lambda k: lm.init_params(cfg, k))(
-            jax.random.PRNGKey(seed))
-        prompt = {k: v for k, v in
-                  pipe.batch(jnp.zeros((), jnp.int32)).items()
-                  if k != "targets"}
+    engines = [LMEngine(cfg, lanes=lanes, prompt_len=prompt_len,
+                        max_gen=gen, decode_slice=decode_slice,
+                        temperature=temperature, seed=seed, mesh=mesh,
+                        shard=replicas > 1)
+               for _ in range(replicas)]
+    tickets = []
+    for b in range(batch):
+        eng = engines[b % replicas]
+        extras = {k: prompt[k][b] for k in extras_keys}
+        tickets.append(eng.submit(prompt["tokens"][b], gen=gen,
+                                  extras=extras or None))
+    for eng in engines:
+        eng.run()
+    tokens = jnp.asarray(np.stack([t.result(60.0) for t in tickets]))
 
-        prefill_fn = jax.jit(make_prefill_step(cfg, max_seq=max_seq))
-        decode_fn = jax.jit(make_decode_step(cfg), donate_argnums=(1,))
-
-        t0 = time.time()
-        state, logits = prefill_fn(params, prompt)
-        jax.block_until_ready(logits)
-        t_prefill = time.time() - t0
-
-        def sample(key, logits):
-            if temperature <= 0:
-                return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-            return jax.random.categorical(
-                key, logits / temperature, axis=-1).astype(jnp.int32)
-
-        key = jax.random.PRNGKey(seed + 1)
-        # decode state position starts where the prompt ended (frontends
-        # prepend patches, so use the true prefill length)
-        pos0 = prompt_len + (cfg.n_patches if cfg.frontend == "vision_stub"
-                             else 0)
-        tok = sample(key, logits)[:, None]
-        out_tokens = [tok]
-        t0 = time.time()
-        for i in range(gen - 1):
-            key = jax.random.fold_in(key, i)
-            logits, state = decode_fn(params, state, tok,
-                                      jnp.int32(pos0 + i))
-            tok = sample(key, logits)[:, None]
-            out_tokens.append(tok)
-        jax.block_until_ready(tok)
-        t_decode = time.time() - t0
-
-    tokens = jnp.concatenate(out_tokens, axis=1)
-    stats = {
-        "prefill_s": t_prefill,
-        "decode_s": t_decode,
-        "tok_per_s": batch * (gen - 1) / max(t_decode, 1e-9),
-    }
+    merged = [c for eng in engines for c in eng.call_log]
+    stats = _stats_from_log(merged, tokens_total=batch * gen)
+    stats["replicas"] = replicas
     StructuredLogger(log_fn=log_fn, sink=sink).log(
         "serve.done",
-        f"[serve] prefill {t_prefill*1e3:.0f} ms, "
-        f"decode {stats['tok_per_s']:.1f} tok/s",
+        f"[serve] warm-up {stats['warmup_s']*1e3:.0f} ms, "
+        f"steady {stats['tok_per_s_steady']:.1f} tok/s "
+        f"({stats['tok_per_s']:.1f} end-to-end)",
         batch=batch, prompt_len=prompt_len, gen=gen, **stats)
     return tokens, stats
 
@@ -96,6 +118,9 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="model replicas (lanes split across them; decode "
+                         "state sharded per repro.dist specs)")
     ap.add_argument("--metrics", default=None, metavar="PATH",
                     help="write structured serve stats as JSONL to PATH")
     args = ap.parse_args()
@@ -104,7 +129,7 @@ def main():
     sink = MetricsSink(args.metrics) if args.metrics else None
     tokens, stats = serve(cfg, batch=args.batch, prompt_len=args.prompt_len,
                           gen=args.gen, temperature=args.temperature,
-                          sink=sink)
+                          replicas=args.replicas, sink=sink)
     print(f"[serve] generated {tokens.shape} tokens; stats={stats}")
     if sink is not None:
         sink.close()

@@ -138,11 +138,34 @@ checkpoints would alias — ``core.adjoint._reject_vmap_offload`` catches it
 up front).  The *segment-batched* mode IS (``vmap_method="broadcast_all"``):
 one callback serves the entire batch, each slot stores the full batch
 block with batch axes leading, so element b's checkpoints occupy index b
-of the block — the per-batch-element key scheme the vmapped implicit
-ensembles rely on (``core.implicit``).  Stores are per-``odeint``-call
-objects, so concurrent solves never share keys (a caller-owned
-``disk_dir`` likewise belongs to one live store at a time — the stale
-sweep on init assumes any file it finds is from a dead run).
+of the block — the per-batch-element layout the vmapped implicit
+ensembles rely on (``core.implicit``) and, since PR 10, the vmapped
+explicit scanned pnode path (``core.adjoint``).  Stores are
+per-``odeint``-call objects unless a caller passes its own
+(``odeint(offload_store=...)``), so concurrent solves never share keys
+(a caller-owned ``disk_dir`` likewise belongs to one live store at a
+time — the stale sweep on init assumes any file it finds is from a dead
+run).
+
+Per-request lane keys (PR 10, the serving engine's contract): setting
+``store.lane_keys = (rid_0, ..., rid_{B-1})`` — one entry per leading
+mapped batch lane, ``None`` marking a padding lane — switches the
+segment-batched callbacks from whole-batch blocks to per-lane rows keyed
+``(rid_b, base + i)``.  Each in-flight request's checkpoint segments are
+then independently written, prefetched, and freed: padding lanes store
+NOTHING (a half-full bucket costs half the checkpoint bytes), a
+departing request's slots are dropped host-side with
+``free_request(rid)`` (``slot_census()`` returns to empty once every
+lane departed), and ``request_slots(rid)`` counts one request's live
+slots.  ``lane_keys`` is consulted at callback EXECUTION time, never at
+trace time, so one compiled bucket program serves every batch
+composition — the jit cache stays bounded by the bucket set.  Values
+pass through the exact same bytes as the unkeyed layout (row ``b`` of
+the batch block), so keyed batched solves stay bitwise-identical to the
+equivalent unbatched per-request loop.  Only a single mapped axis is
+supported (the serving batch); ``free_request`` runs between executions
+(host-side, not token-ordered) — never while a solve that still needs
+those slots is in flight.
 
 Resilience (PR 8; all dormant-by-default, the plain paths above are
 byte-identical when unused):
@@ -366,6 +389,16 @@ def _crc_leaves(arrs) -> int:
     for a in arrs:
         c = zlib.crc32(np.ascontiguousarray(a).tobytes(), c)
     return c
+
+
+def _slot_salt(slot) -> int:
+    """Deterministic int salt for a slot key: ints pass through, the
+    lane-keyed tuples (request_id, step) hash via crc32 of their repr —
+    stable across processes (unlike ``hash``), so injected corruption
+    stays replayable."""
+    if isinstance(slot, (int, np.integer)):
+        return int(slot)
+    return zlib.crc32(repr(slot).encode("utf-8"))
 
 
 def _cleanup_disk(paths: List[str], root: Optional[str], owned: bool) -> None:
@@ -608,6 +641,12 @@ class SpillStore(CheckpointStore):
         #: invisible by the time write_batch/prefetch are traced; see
         #: ``batch_scale``).
         self.payload_scale = 1
+        #: per-request lane keys (serving; see module docstring): a tuple
+        #: with one request id per leading mapped batch lane (None =
+        #: padding lane, stores nothing).  Consulted at callback
+        #: EXECUTION time — mutate between executions to re-key the same
+        #: compiled program for a new batch composition.
+        self.lane_keys: Optional[Tuple[Any, ...]] = None
         #: resilience knobs (see ``make_store``); all dormant by default —
         #: with fault_plan=None and integrity=False the callbacks execute
         #: the exact pre-PR-8 byte sequence
@@ -784,11 +823,69 @@ class SpillStore(CheckpointStore):
                 dbytes += db
         return rows, dbytes
 
+    @staticmethod
+    def _check_lanes(bnd: int, shape, keys) -> None:
+        """lane_keys requires exactly ONE mapped axis whose size matches
+        the key tuple — anything else is a serving-engine wiring bug."""
+        if bnd != 1:
+            raise ValueError(
+                f"lane_keys requires exactly one mapped batch axis, got "
+                f"{bnd} (nest the request batch as the single vmapped "
+                "axis)")
+        if shape[0] != len(keys):
+            raise ValueError(
+                f"lane_keys has {len(keys)} entries but the mapped batch "
+                f"axis has {shape[0]} lanes")
+
+    def _gather_rows_keyed(self, base: int, seg: int, keys):
+        """Keyed counterpart of ``_gather_rows``: per-lane rows
+        ``[(keys[b], base+i) for i in range(seg)]`` (None rows for
+        missing slots and padding lanes)."""
+        rows, dbytes = [], 0
+        with self._io_lock:
+            for rk in keys:
+                lane = []
+                for i in range(seg):
+                    if rk is None:
+                        lane.append(None)
+                        continue
+                    leaves, db = self._slot_read_any((rk, base + i))
+                    lane.append(leaves)
+                    dbytes += db
+                rows.append(lane)
+        return rows, dbytes
+
     def slot_census(self) -> Dict[str, int]:
         """Live slot counts by medium (tests/benchmarks introspection)."""
         with self._io_lock:
             return {"ram": len(self._host), "disk": len(self._disk),
                     "disk_files": len(self._file_slots)}
+
+    def request_slots(self, request_id) -> int:
+        """Live lane-keyed slots held for one request (both media)."""
+        with self._io_lock:
+            return sum(1 for k in set(self._host) | set(self._disk)
+                       if isinstance(k, tuple) and k[0] == request_id)
+
+    def free_request(self, request_id) -> int:
+        """Drop every lane-keyed checkpoint slot of a departed request
+        (both media; segment files are deleted once their last live slot
+        goes).  Host-side and NOT token-ordered: the serving engine calls
+        it between executions, never while a solve that still needs the
+        slots is in flight.  Returns the number of slots dropped."""
+        with self._io_lock:
+            victims = [k for k in set(self._host) | set(self._disk)
+                       if isinstance(k, tuple) and k[0] == request_id]
+        for k in victims:
+            self._drop_slot(k)
+            self._sums.pop(k, None)
+        if victims:
+            self._tally_counter("free_cb")
+        if self._obs is not None:
+            self._obs.record("spill.free_request", _runtime=True,
+                             store=self.store_id, request=request_id,
+                             slots=len(victims))
+        return len(victims)
 
     def _ensure_exec(self):
         if self._exec is None:
@@ -818,7 +915,7 @@ class SpillStore(CheckpointStore):
             self._drop_slot(slot)
             return None
         if spec.kind == "corrupt":
-            return self.fault_plan.corrupt_arrays(arrs, salt=slot)
+            return self.fault_plan.corrupt_arrays(arrs, salt=_slot_salt(slot))
         return arrs
 
     def _read_attempt_ok(self, base: int) -> bool:
@@ -965,7 +1062,11 @@ class SpillStore(CheckpointStore):
         the whole batch block ``arr[..., i, :]``.  One callback serves the
         entire batch and batch elements never alias: element b's
         checkpoints live at index b of its slot's block (the
-        per-batch-element key scheme)."""
+        per-batch-element key scheme).
+
+        With ``lane_keys`` set the batch block is instead split into
+        per-lane rows keyed ``(lane_keys[b], base + i)`` — same bytes,
+        request-addressable slots (padding lanes store nothing)."""
         with host_annotation("spill/write_batch"):
             spec = (self.fault_plan.tick("spill.write")
                     if self.fault_plan is not None else None)
@@ -973,15 +1074,33 @@ class SpillStore(CheckpointStore):
             seg = int(np.shape(stacked[0])[bnd])
             base = int(np.ravel(base)[0])  # broadcast copies are identical
             arrs = [np.asarray(x) for x in stacked]
-            sl = (slice(None),) * bnd
-            rows: Dict[int, List[np.ndarray]] = {}
-            for i in range(seg):
-                slot_arrs = [a[sl + (i,)].copy() for a in arrs]
-                if self.integrity:
-                    self._sums[base + i] = _crc_leaves(slot_arrs)
-                slot_arrs = self._apply_write_fault(spec, base + i, slot_arrs)
-                if slot_arrs is not None:
-                    rows[base + i] = slot_arrs
+            keys = self.lane_keys
+            rows: Dict[Any, List[np.ndarray]] = {}
+            if keys is not None:
+                self._check_lanes(bnd, np.shape(arrs[0]), keys)
+                for b, rk in enumerate(keys):
+                    if rk is None:  # padding lane: nothing stored
+                        continue
+                    for i in range(seg):
+                        key = (rk, base + i)
+                        slot_arrs = [np.asarray(a[b, i]).copy()
+                                     for a in arrs]
+                        if self.integrity:
+                            self._sums[key] = _crc_leaves(slot_arrs)
+                        slot_arrs = self._apply_write_fault(spec, key,
+                                                            slot_arrs)
+                        if slot_arrs is not None:
+                            rows[key] = slot_arrs
+            else:
+                sl = (slice(None),) * bnd
+                for i in range(seg):
+                    slot_arrs = [a[sl + (i,)].copy() for a in arrs]
+                    if self.integrity:
+                        self._sums[base + i] = _crc_leaves(slot_arrs)
+                    slot_arrs = self._apply_write_fault(spec, base + i,
+                                                        slot_arrs)
+                    if slot_arrs is not None:
+                        rows[base + i] = slot_arrs
             medium, _ = self._store_rows(rows)
             self._tally("write", slots=seg,
                         nbytes=sum(a.nbytes for a in arrs), base=base,
@@ -997,10 +1116,16 @@ class SpillStore(CheckpointStore):
             with host_annotation("spill/dispatch"):
                 base = int(np.ravel(base)[0])
                 ex = self._ensure_exec()
+                keys = self.lane_keys  # snapshot: stable per execution
                 for o in range(0, seg, m):
                     b = base + o
-                    self._inflight[b] = ex.submit(
-                        self._gather_rows, b, min(m, seg - o))
+                    if keys is not None:
+                        self._inflight[b] = ex.submit(
+                            self._gather_rows_keyed, b, min(m, seg - o),
+                            keys)
+                    else:
+                        self._inflight[b] = ex.submit(
+                            self._gather_rows, b, min(m, seg - o))
                 self._tally_counter("dispatch_cb")
                 if self._obs is not None:
                     self._obs.record("spill.dispatch", _runtime=True,
@@ -1029,6 +1154,9 @@ class SpillStore(CheckpointStore):
                 # one is in flight for this chunk; fall back to reading
                 # storage synchronously (also on background I/O errors —
                 # the sync path then surfaces them deterministically)
+                keys = self.lane_keys
+                if keys is not None:
+                    self._check_lanes(len(bshape), bshape, keys)
                 rows, dbytes, hit = None, 0, False
                 fut = self._inflight.pop(base, None)
                 if fut is not None:
@@ -1038,7 +1166,10 @@ class SpillStore(CheckpointStore):
                     except Exception:  # pragma: no cover - backend I/O race
                         rows = None
                 if rows is None:
-                    rows, dbytes = self._gather_rows(base, seg)
+                    rows, dbytes = (
+                        self._gather_rows_keyed(base, seg, keys)
+                        if keys is not None
+                        else self._gather_rows(base, seg))
                 if hit:
                     self._tally_counter("prefetch_hit_cb")
                 out = []
@@ -1046,20 +1177,43 @@ class SpillStore(CheckpointStore):
                     stack = np.zeros(bshape + (seg,) + tuple(s.shape),
                                      s.dtype)
                     if ok:
-                        for i in range(seg):
-                            if rows[i] is not None:  # missing slots -> zeros
-                                stack[sl + (i,)] = rows[i][k]
+                        if keys is not None:
+                            # per-lane keyed rows (padding lanes -> zeros)
+                            for b in range(len(keys)):
+                                for i in range(seg):
+                                    if rows[b][i] is not None:
+                                        stack[b, i] = rows[b][i][k]
+                        else:
+                            for i in range(seg):
+                                if rows[i] is not None:  # missing -> zeros
+                                    stack[sl + (i,)] = rows[i][k]
                     out.append(stack)
                 if checked and ok:
-                    for i in range(seg):
-                        if not self._leaves_intact(base + i, rows[i]):
-                            ok = False
-                            self._tally_counter("integrity_fail")
-                            if self._obs is not None:
-                                self._obs.record(
-                                    "spill.integrity", _runtime=True,
-                                    store=self.store_id, slot=base + i,
-                                    base=base)
+                    if keys is not None:
+                        for b, rk in enumerate(keys):
+                            if rk is None:  # padding: legitimately absent
+                                continue
+                            for i in range(seg):
+                                if self._leaves_intact((rk, base + i),
+                                                       rows[b][i]):
+                                    continue
+                                ok = False
+                                self._tally_counter("integrity_fail")
+                                if self._obs is not None:
+                                    self._obs.record(
+                                        "spill.integrity", _runtime=True,
+                                        store=self.store_id,
+                                        slot=[rk, base + i], base=base)
+                    else:
+                        for i in range(seg):
+                            if not self._leaves_intact(base + i, rows[i]):
+                                ok = False
+                                self._tally_counter("integrity_fail")
+                                if self._obs is not None:
+                                    self._obs.record(
+                                        "spill.integrity", _runtime=True,
+                                        store=self.store_id, slot=base + i,
+                                        base=base)
                 self._tally("read", slots=seg,
                             nbytes=sum(a.nbytes for a in out), base=base,
                             medium=("disk" if dbytes else "ram") if ok

@@ -192,6 +192,7 @@ def plan_odeint(f: Callable, u0: PyTree, theta: PyTree, *, dt: float,
                 verify: str = "measure",
                 loss_fn: Optional[Callable] = None,
                 solver_opts: Optional[dict] = None,
+                batch: int = 1,
                 explain: bool = False) -> Plan:
     """Pick (policy, ncheck, offload) for one odeint call under a budget.
 
@@ -226,8 +227,21 @@ def plan_odeint(f: Callable, u0: PyTree, theta: PyTree, *, dt: float,
     + spill/disk offload under the RAM cap, no device-budget walk.  A
     disk_budget the overflow exceeds marks the plan ``fits=False`` (best
     effort), mirroring the device-budget semantics.
+
+    ``batch`` prices a BATCHED solve (the serving engine's vmapped lane
+    dimension): per-step state and f-activation working sets scale by the
+    lane count — and so does every spill checkpoint slot, which is what
+    sizes the batched offload working set — while ``theta`` is shared
+    across lanes and does not.  ``batch > 1`` uses the analytic model for
+    the budget walk (``verify="model"`` semantics) since the measured
+    reverse pass lowers the unbatched program.
     """
-    state_bytes_ = tree_bytes(u0)
+    b = int(batch)
+    if b < 1:
+        raise ValueError(f"batch must be >= 1, got {batch}")
+    if b > 1:
+        verify = "model"
+    state_bytes_ = tree_bytes(u0) * b
     if mem_budget is None and ram_budget is not None:
         # RAM-bounded offload without a device budget: the ROADMAP
         # long-trajectory shape — keep pnode's zero-recompute optimum,
@@ -253,7 +267,7 @@ def plan_odeint(f: Callable, u0: PyTree, theta: PyTree, *, dt: float,
         # no constraint: the paper's method — no recompute beyond the
         # per-stage linearizations, bounded graph depth
         est = policy_cost("pnode", method=method, n_steps=n_steps,
-                          state_bytes=tree_bytes(u0),
+                          state_bytes=state_bytes_,
                           theta_bytes=tree_bytes(theta),
                           **_solver_kw(solver_opts))
         report = ()
@@ -268,9 +282,9 @@ def plan_odeint(f: Callable, u0: PyTree, theta: PyTree, *, dt: float,
     if verify not in ("model", "measure"):
         raise ValueError(f"verify must be 'model' or 'measure', "
                          f"got {verify!r}")
-    state_bytes = tree_bytes(u0)
+    state_bytes = tree_bytes(u0) * b
     theta_bytes = tree_bytes(theta)
-    fa = f_activation_bytes(f, u0, theta, t0)
+    fa = f_activation_bytes(f, u0, theta, t0) * b
     cands = candidate_costs(method=method, n_steps=n_steps,
                             state_bytes=state_bytes, theta_bytes=theta_bytes,
                             f_act_bytes=fa, mem_budget=mem_budget,

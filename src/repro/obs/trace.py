@@ -50,6 +50,7 @@ from __future__ import annotations
 
 import json
 import threading
+import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
@@ -72,10 +73,14 @@ class TraceEvent:
     data: Dict[str, Any]
     seq: int
     runtime: bool  # True: emitted during execution; False: during tracing
+    #: host wall clock at record time (time.time()).  Host-side metadata
+    #: only — nothing traced reads it, so numerics stay untouched; the
+    #: Perfetto export (``obs.trace_export``) uses it for the timeline.
+    ts: float = 0.0
 
     def to_json(self) -> Dict[str, Any]:
         return {"kind": self.kind, "seq": self.seq,
-                "runtime": self.runtime, **self.data}
+                "runtime": self.runtime, "ts": self.ts, **self.data}
 
 
 class FlightRecorder:
@@ -92,7 +97,8 @@ class FlightRecorder:
     # -- host-side recording (trace-time events, store callbacks) ----------
     def record(self, kind: str, *, _runtime: bool = False, **data) -> None:
         with self._lock:
-            self._events.append(TraceEvent(kind, data, self._seq, _runtime))
+            self._events.append(TraceEvent(kind, data, self._seq, _runtime,
+                                           time.time()))
             self._seq += 1
         if self.registry is not None:
             self.registry.inc(f"trace.{kind}")

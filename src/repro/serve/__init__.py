@@ -1,0 +1,14 @@
+"""``repro.serve`` — continuous-batching inference for the paper's ODE
+workloads (CNF density/score, ODE classifiers) and the LM decode path,
+with per-request checkpoint offload: each in-flight request's reverse-pass
+checkpoint slots are keyed ``(request_id, step)`` in the spill/disk store,
+written/prefetched/freed independently as requests join and leave the
+batch.  See ``queue.py`` (admission + scheduling) and ``engine.py``
+(ODEEngine / LMEngine); the README's "Serving" section has the tour.
+"""
+from repro.serve.engine import LMEngine, ODEEngine
+from repro.serve.queue import (AdmissionError, BucketSpec, Request,
+                               RequestQueue, Ticket)
+
+__all__ = ["AdmissionError", "BucketSpec", "LMEngine", "ODEEngine",
+           "Request", "RequestQueue", "Ticket"]
